@@ -1,0 +1,50 @@
+"""Kernel micro-benchmarks (structural, CPU): wall time of the jnp reference
+path + derived bytes moved.  Real TPU numbers come from the roofline table;
+this bench pins the kernels' algorithmic bandwidth accounting."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit
+from repro.kernels import ref
+
+
+def _time(f, *args, reps=3):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        jax.block_until_ready(f(*args))
+    t0 = time.time()
+    for _ in range(reps):
+        out = f(*args)
+        jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6
+
+
+def main():
+    rng = np.random.default_rng(0)
+    # fedavg: K=32 clients, 4M params
+    K, N = 32, 4 << 20
+    u = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+    w = jnp.ones((K,), jnp.float32)
+    f = jax.jit(ref.fedavg_reduce_ref)
+    us = _time(f, u, w)
+    gb = (K * N * 4 + N * 4) / 1e9
+    emit("fedavg_ref_32x4M", us, f"GBps={gb/(us/1e6):.1f}")
+    # quantize 8M floats
+    x = jnp.asarray(rng.standard_normal(8 << 20), jnp.float32)
+    q = jax.jit(lambda v: ref.quantize_ref(v, 256))
+    us = _time(q, x)
+    emit("quantize_ref_8M", us, f"GBps={(x.size*5/1e9)/(us/1e6):.1f}")
+    # flash ref attention 1x1024x8x64
+    qq = jnp.asarray(rng.standard_normal((1, 1024, 8, 64)), jnp.bfloat16)
+    kk = jnp.asarray(rng.standard_normal((1, 1024, 2, 64)), jnp.bfloat16)
+    fa = jax.jit(lambda a, b: ref.flash_attention_ref(a, b, b, causal=True))
+    us = _time(fa, qq, kk)
+    flops = 4 * 1024 * 1024 * 8 * 64
+    emit("attention_ref_1k", us, f"GFLOPs={flops/1e9/(us/1e6):.1f}")
+    return True
+
+
+if __name__ == "__main__":
+    main()

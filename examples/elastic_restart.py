@@ -1,0 +1,14 @@
+"""Fault-tolerance example: checkpoint -> simulated failure -> elastic
+restore on a different mesh, then continue training.
+
+    PYTHONPATH=src python examples/elastic_restart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.elastic import main
+
+if __name__ == "__main__":
+    raise SystemExit(main(["--arch", "llama3.2-1b-smoke", "--steps", "8"]))

@@ -1,0 +1,37 @@
+"""Batched serving example: prefill + KV-cache decode on three model families
+(full attention, sliding window + MoE, attention-free SSM).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.model import build_model
+from repro.serve.engine import Engine
+
+
+def main():
+    for arch in ("llama3.2-1b", "mixtral-8x22b", "mamba2-1.3b"):
+        cfg = get_config(arch).reduced()
+        model = build_model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (4, 24)),
+                                       jnp.int32)}
+        eng = Engine(cfg, params, temperature=0.0)
+        gen, stats = eng.generate(batch, max_new=12)
+        print(f"{arch:16s} prefill {stats.prefill_s*1e3:7.1f} ms | "
+              f"decode {stats.tokens_per_s:7.1f} tok/s | "
+              f"first tokens {gen[0][:6].tolist()}")
+    print("\nOK — same decode_step the multi-pod dry-run lowers at 512 chips.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: Venn (collaborative-learning resource manager) + JAX data plane."""
+__version__ = "1.0.0"

@@ -1,0 +1,24 @@
+"""Venn core: the paper's contribution — IRS scheduling (Alg 1), tier-based
+device matching (Alg 2), fairness knob, supply estimation, and baselines."""
+from .baselines import BaseScheduler, FifoScheduler, RandomScheduler, SrsfScheduler
+from .eligibility import EligibilityIndex
+from .fairness import FairnessPolicy
+from .irs import SchedulePlan, venn_schedule
+from .manager import VennScheduler
+from .matching import JobProfile, TierDecision, TierMatcher
+from .supply import SupplyEstimator
+from .types import Assignment, Device, Job, JobGroup, JobRequest, JobStatus, Requirement
+
+SCHEDULERS = {
+    "random": RandomScheduler,
+    "fifo": FifoScheduler,
+    "srsf": SrsfScheduler,
+    "venn": VennScheduler,
+}
+
+__all__ = [
+    "Assignment", "BaseScheduler", "Device", "EligibilityIndex", "FairnessPolicy",
+    "FifoScheduler", "Job", "JobGroup", "JobProfile", "JobRequest", "JobStatus",
+    "RandomScheduler", "Requirement", "SCHEDULERS", "SchedulePlan", "SrsfScheduler",
+    "SupplyEstimator", "TierDecision", "TierMatcher", "VennScheduler", "venn_schedule",
+]

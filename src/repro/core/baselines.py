@@ -1,0 +1,85 @@
+"""Baseline schedulers (§2.2, §5.1).
+
+All production FL resource managers boil down to random device-to-job matching
+in different forms (Apple: client-driven sampling; Meta: centralized random
+match; Google: job-driven sampling).  We implement:
+
+* :class:`RandomScheduler` — the paper's *optimized* random baseline: job
+  requests are served in a randomized order (re-drawn on every scheduling
+  event) rather than devices picking uniformly, which reduces round abortions
+  under contention and makes the baseline stronger.
+* :class:`FifoScheduler` — requests served in submission order.
+* :class:`SrsfScheduler` — Shortest Remaining Service First (Gu et al., 2019,
+  Tiresias-style), applied to the remaining demand of the outstanding request
+  (like Venn, it is agnostic to total job rounds, §5.1).
+
+Every scheduler implements the same interface the simulator drives:
+
+    on_request(request, now)   — a job submitted a round request
+    on_complete(request, now)  — a request finished/aborted
+    assign(device, now)        — a device checked in; return a JobRequest or None
+"""
+from __future__ import annotations
+
+import random
+from typing import List, Optional
+
+from .types import Device, JobRequest
+
+
+class BaseScheduler:
+    """Common bookkeeping: the set of outstanding requests."""
+
+    name = "base"
+
+    def __init__(self, seed: int = 0):
+        self.rng = random.Random(seed)
+        self.pending: List[JobRequest] = []
+
+    # ---- simulator hooks --------------------------------------------------
+
+    def on_request(self, request: JobRequest, now: float) -> None:
+        self.pending.append(request)
+        self._resort(now)
+
+    def on_complete(self, request: JobRequest, now: float) -> None:
+        if request in self.pending:
+            self.pending.remove(request)
+        self._resort(now)
+
+    def assign(self, device: Device, now: float) -> Optional[JobRequest]:
+        for req in self.pending:
+            if req.remaining > 0 and req.requirement.matches(device):
+                return req
+        return None
+
+    def on_response(self, request: JobRequest, device: Device,
+                    response_time: float, ok: bool, now: float) -> None:
+        """Response feedback — baselines ignore it (Venn profiles tiers)."""
+
+    # ---- per-scheduler ordering -------------------------------------------
+
+    def _resort(self, now: float) -> None:
+        raise NotImplementedError
+
+
+class RandomScheduler(BaseScheduler):
+    name = "random"
+
+    def _resort(self, now: float) -> None:
+        self.rng.shuffle(self.pending)
+
+
+class FifoScheduler(BaseScheduler):
+    name = "fifo"
+
+    def _resort(self, now: float) -> None:
+        # job-arrival order: an early job keeps priority across all its rounds
+        self.pending.sort(key=lambda r: (r.job.arrival_time, r.job.job_id))
+
+
+class SrsfScheduler(BaseScheduler):
+    name = "srsf"
+
+    def _resort(self, now: float) -> None:
+        self.pending.sort(key=lambda r: (r.remaining, r.job.job_id))

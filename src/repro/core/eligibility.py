@@ -1,0 +1,71 @@
+"""Eligibility index: maps devices <-> requirements via capability *atoms*.
+
+The IRS problem (§4.2) is a set system where each job group's eligible set
+``S_j`` may include / overlap / nest with others.  We factor the device
+universe into **atoms** — equivalence classes of devices by the exact subset of
+requirements they satisfy.  Every eligible set is then a union of atoms, and
+Algorithm 1's set operations (``S ∩ S_j``, ``S \\ S'_j``, ``S_j ∩ S_k``) become
+cheap frozenset algebra over atom keys.
+"""
+from __future__ import annotations
+
+from typing import Dict, FrozenSet, Iterable, List, Sequence
+
+from .types import Device, Requirement
+
+AtomKey = FrozenSet[str]
+
+
+class EligibilityIndex:
+    """Precomputes atom membership for a fixed set of requirements.
+
+    Atoms are keyed by the frozenset of requirement names a device satisfies.
+    With R distinct requirements there are at most 2^R atoms, but the device
+    population only ever realizes a handful (4 in the paper's Figure 8a).
+    """
+
+    def __init__(self, requirements: Sequence[Requirement]):
+        self.requirements: List[Requirement] = list(requirements)
+        self._by_name: Dict[str, Requirement] = {r.name: r for r in self.requirements}
+        if len(self._by_name) != len(self.requirements):
+            raise ValueError("duplicate requirement names")
+
+    # ---------------------------------------------------------------- atoms
+
+    def atom_of(self, device: Device) -> AtomKey:
+        key = frozenset(r.name for r in self.requirements if r.matches(device))
+        device.atom = key
+        return key
+
+    def eligible_atoms(self, requirement: Requirement, atoms: Iterable[AtomKey]) -> FrozenSet[AtomKey]:
+        """Atoms whose devices satisfy ``requirement`` (atom contains req name)."""
+        name = requirement.name
+        return frozenset(a for a in atoms if name in a)
+
+    def add_requirement(self, requirement: Requirement) -> None:
+        if requirement.name in self._by_name:
+            existing = self._by_name[requirement.name]
+            if existing.mins != requirement.mins:
+                raise ValueError(f"requirement name reused with different spec: {requirement.name}")
+            return
+        self.requirements.append(requirement)
+        self._by_name[requirement.name] = requirement
+
+    def requirement(self, name: str) -> Requirement:
+        return self._by_name[name]
+
+    # ------------------------------------------------------------- analysis
+
+    def relation(self, a: Requirement, b: Requirement) -> str:
+        """Classify the eligible-set relation between two requirements:
+        one of {'equal', 'contains', 'within', 'overlap', 'disjoint'} judged
+        from thresholds (exact for min-threshold requirements)."""
+        if a.mins == b.mins:
+            return "equal"
+        if a.subsumes(b):
+            return "contains"
+        if b.subsumes(a):
+            return "within"
+        # min-threshold boxes always intersect at the pointwise-max corner,
+        # so two distinct threshold requirements overlap.
+        return "overlap"

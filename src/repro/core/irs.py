@@ -1,0 +1,146 @@
+"""Intersection Resource Scheduling — Algorithm 1 of the paper (§4.2).
+
+Two-level decomposition:
+
+* **Intra-group** (§4.2.1): within a resource-homogeneous job group, order jobs
+  by remaining demand ascending (smallest-remaining-demand-first), optionally
+  fairness-adjusted (§4.4).
+* **Inter-group** (§4.2.2): (i) initial allocation — groups claim their
+  eligible atoms scarcest-first with no sharing; (ii) greedy reallocation —
+  from the most abundant group down, group ``j`` takes the intersected atoms
+  owned by a scarcer overlapping group ``k`` iff the queue-pressure ratio
+  ``m'_j/|S'_j| > m'_k/|S'_k|`` (Alg. 1 line 13, justified by Lemma 2:
+  prioritize the side whose (queue length × per-job delay) product shrinks
+  the average scheduling delay most).
+
+The output is a :class:`SchedulePlan`: an ownership partition of atoms plus a
+per-atom priority list of groups, so that device→job assignment is an O(1)
+lookup on every check-in (devices are never "scattered" across jobs; the fixed
+job order both minimizes delay and keeps the hot path cheap).
+
+Complexity: ``max(O(m log m), O(n^2))`` for m jobs, n groups — measured in
+benchmarks/fig10_overhead.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+from .types import Job, JobGroup
+
+AtomKey = FrozenSet[str]
+
+# A queue-length provider:  group -> effective queue length m'_j (possibly
+# fairness-adjusted, possibly counting previously-deprioritized jobs).
+QueueLenFn = Callable[[JobGroup], float]
+# A demand key for intra-group ordering (fairness-adjusted d'_i).
+DemandKeyFn = Callable[[Job], float]
+
+
+@dataclass
+class SchedulePlan:
+    """Result of one VENN-SCHED invocation."""
+
+    groups: List[JobGroup] = field(default_factory=list)
+    # atom -> groups in assignment-priority order (owner first, then fallbacks)
+    atom_priority: Dict[AtomKey, List[JobGroup]] = field(default_factory=dict)
+    # group.requirement.name -> ordered pending jobs (head = currently served)
+    job_order: Dict[str, List[Job]] = field(default_factory=dict)
+
+    def owner(self, atom: AtomKey) -> Optional[JobGroup]:
+        order = self.atom_priority.get(atom)
+        return order[0] if order else None
+
+    def served_jobs(self) -> List[Job]:
+        """{G_j[0]} — the head job of every group (Alg. 1 return value)."""
+        return [order[0] for order in self.job_order.values() if order]
+
+
+def venn_schedule(
+    groups: Sequence[JobGroup],
+    queue_len: QueueLenFn,
+    demand_key: Optional[DemandKeyFn] = None,
+) -> SchedulePlan:
+    """Run Algorithm 1 over job groups whose ``eligible_atoms``, ``supply``
+    and per-atom rates have been refreshed by the caller (manager)."""
+
+    demand_key = demand_key or (lambda j: float(j.remaining_demand))
+    active = [g for g in groups if g.pending_jobs()]
+    plan = SchedulePlan(groups=list(groups))
+
+    # ---- intra-group order (Alg. 1 lines 2-3) ------------------------------
+    for g in active:
+        order = sorted(g.pending_jobs(), key=lambda j: (demand_key(j), j.job_id))
+        plan.job_order[g.requirement.name] = order
+
+    if not active:
+        return plan
+
+    # ---- initial allocation (lines 4-7): scarcest group claims first ------
+    atom_rates: Dict[AtomKey, float] = {}
+    for g in active:
+        for a in g.eligible_atoms:
+            atom_rates.setdefault(a, 0.0)
+    # per-atom rate share: supply estimator stores rate per atom on the group
+    # (all groups see the same per-atom rate; g.supply = Σ rates over atoms).
+    unclaimed = set(atom_rates)
+    by_scarcity = sorted(active, key=lambda g: (g.supply, g.requirement.name))
+    for g in by_scarcity:
+        mine = unclaimed & set(g.eligible_atoms)
+        g.allocation = {a: g.atom_rate(a) for a in mine}  # type: ignore[attr-defined]
+        unclaimed -= mine
+
+    # ---- greedy inter-group reallocation (lines 8-17) ----------------------
+    by_abundance = sorted(active, key=lambda g: (-g.supply, g.requirement.name))
+    for gj in by_abundance:
+        if gj.alloc_rate <= 0 and not gj.allocation:
+            pass  # |S'_j| may be 0; the ratio below treats it as +inf pressure
+        # candidate donors: scarcer groups with intersecting eligible sets,
+        # visited from most abundant down ("take from relatively abundant
+        # groups first").
+        donors = [
+            gk for gk in active
+            if gk is not gj
+            and gk.supply < gj.supply
+            and (set(gk.eligible_atoms) & set(gj.eligible_atoms))
+        ]
+        donors.sort(key=lambda g: (-g.supply, g.requirement.name))
+        for gk in donors:
+            mj = queue_len(gj)
+            mk = queue_len(gk)
+            rj = _pressure(mj, gj.alloc_rate)
+            rk = _pressure(mk, gk.alloc_rate)
+            if rj > rk:
+                shared = set(gj.eligible_atoms) & set(gk.allocation)
+                if not shared:
+                    continue
+                for a in shared:
+                    gj.allocation[a] = gj.allocation.get(a, 0.0) + gk.allocation.pop(a)
+            else:
+                # if G_j wants more it must first have out-pressured the more
+                # abundant donors; stop here (Alg. 1 line 17).
+                break
+
+    # ---- per-atom priority lists -------------------------------------------
+    for a in atom_rates:
+        owners = [g for g in active if a in g.allocation]
+        fallbacks = [
+            g for g in active
+            if a in g.eligible_atoms and a not in g.allocation
+        ]
+        # owner first; fallbacks scarcest-first so leftover devices keep
+        # serving the most constrained queues.
+        fallbacks.sort(key=lambda g: (g.supply, g.requirement.name))
+        plan.atom_priority[a] = owners + fallbacks
+
+    return plan
+
+
+def _pressure(queue: float, alloc_rate: float) -> float:
+    """m'/|S'| with the empty-allocation convention: a group with pending jobs
+    and zero allocated rate has infinite pressure; an idle group has none."""
+    if queue <= 0:
+        return 0.0
+    if alloc_rate <= 0:
+        return float("inf")
+    return queue / alloc_rate

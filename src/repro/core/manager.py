@@ -1,0 +1,189 @@
+"""VennScheduler — the full resource manager (Fig. 6) wiring together:
+
+* the eligibility index (atoms over requirements),
+* the 24-h windowed supply estimator (§4.4),
+* Algorithm 1 (IRS job scheduling) on every request arrival/completion,
+* Algorithm 2 (tier-based matching) for the currently served jobs,
+* the ε fairness knob (§4.4).
+
+It exposes the same simulator-facing interface as the baselines:
+``on_request`` / ``on_complete`` / ``assign`` / ``on_response``.
+"""
+from __future__ import annotations
+
+import math
+import random
+from typing import Dict, FrozenSet, List, Optional
+
+from .baselines import BaseScheduler
+from .eligibility import EligibilityIndex
+from .fairness import FairnessPolicy
+from .irs import SchedulePlan, venn_schedule
+from .matching import JobProfile, TierDecision, TierMatcher
+from .supply import SupplyEstimator
+from .types import Device, Job, JobGroup, JobRequest
+
+AtomKey = FrozenSet[str]
+
+
+class VennScheduler(BaseScheduler):
+    name = "venn"
+
+    def __init__(self, seed: int = 0, num_tiers: int = 4, epsilon: float = 0.0,
+                 supply_window: float = 24 * 3600.0, enable_matching: bool = True,
+                 enable_irs: bool = True):
+        super().__init__(seed)
+        self.index = EligibilityIndex([])
+        self.supply = SupplyEstimator(window=supply_window)
+        self.matcher = TierMatcher(num_tiers=num_tiers, rng=random.Random(seed + 1))
+        self.fairness = FairnessPolicy(epsilon=epsilon)
+        self.enable_matching = enable_matching
+        self.enable_irs = enable_irs           # ablation: FIFO order + matching
+        self.groups: Dict[str, JobGroup] = {}
+        self.profiles: Dict[int, JobProfile] = {}
+        self.plan: SchedulePlan = SchedulePlan()
+        self.tier_decisions: Dict[int, TierDecision] = {}   # request id()->decision
+        self._tier_decided: Dict[int, tuple] = {}           # job_id -> (round, attempt)
+        self.sched_invocations = 0
+
+    # ------------------------------------------------------------ sim hooks
+
+    def on_request(self, request: JobRequest, now: float) -> None:
+        req = request.requirement
+        self.index.add_requirement(req)
+        g = self.groups.get(req.name)
+        if g is None:
+            g = self.groups[req.name] = JobGroup(requirement=req)
+        if request.job not in g.jobs:
+            g.jobs.append(request.job)
+        self.pending.append(request)
+        self._reschedule(now)
+
+    def on_complete(self, request: JobRequest, now: float) -> None:
+        if request in self.pending:
+            self.pending.remove(request)
+        self.tier_decisions.pop(id(request), None)
+        g = self.groups.get(request.requirement.name)
+        if g and request.job.remaining_rounds == 0 and request.job in g.jobs:
+            g.jobs.remove(request.job)
+        self._reschedule(now)
+
+    def on_response(self, request: JobRequest, device: Device,
+                    response_time: float, ok: bool, now: float) -> None:
+        if ok:
+            prof = self.profiles.setdefault(request.job.job_id, JobProfile())
+            prof.record(device.speed, response_time)
+
+    def assign(self, device: Device, now: float) -> Optional[JobRequest]:
+        atom = self.index.atom_of(device)
+        self.supply.record(atom, now)
+        order = self.plan.atom_priority.get(atom)
+        if order is None:
+            # unseen atom (no plan yet covers it): replan once, then cache an
+            # empty priority so idle periods don't replan per check-in.
+            self._reschedule(now)
+            order = self.plan.atom_priority.setdefault(atom, [])
+        for group in order:
+            jobs = self.plan.job_order.get(group.requirement.name, [])
+            for pos, job in enumerate(jobs):
+                req = job.current
+                if req is None or req.remaining <= 0:
+                    continue
+                decision = self.tier_decisions.get(id(req))
+                if pos == 0 and decision is not None and not decision.accepts(device):
+                    # leftover tiers flow to subsequent jobs in the group
+                    continue
+                return req
+        return None
+
+    # ------------------------------------------------------------- Alg 1+2
+
+    def _reschedule(self, now: float) -> None:
+        self.sched_invocations += 1
+        self.supply.advance(now)
+        atoms = set(self.supply.known_atoms())
+        # make sure every group's requirement defines atoms even pre-traffic
+        active_groups = [g for g in self.groups.values() if g.pending_jobs()]
+        for g in active_groups:
+            g.eligible_atoms = self.index.eligible_atoms(g.requirement, atoms)
+            g.atom_rates = {a: self.supply.rate(a) for a in g.eligible_atoms}
+            g.supply = sum(g.atom_rates.values())
+            g.allocation = {}
+
+        num_jobs = sum(len(g.pending_jobs()) for g in active_groups)
+        solo = lambda j: self._solo_jct(j)
+        if self.enable_irs:
+            self.plan = venn_schedule(
+                active_groups,
+                queue_len=lambda g: self.fairness.queue_len(g, num_jobs, solo),
+                demand_key=lambda j: self.fairness.demand_key(j, num_jobs, solo),
+            )
+        else:  # ablation "Venn w/o scheduling": FIFO order, matching only
+            self.plan = self._fifo_plan(active_groups, atoms)
+
+        # cover every known atom so idle/ineligible check-ins never replan
+        for a in atoms:
+            self.plan.atom_priority.setdefault(a, [])
+
+        if self.enable_matching:
+            self._decide_tiers(now)
+        else:
+            self.tier_decisions.clear()
+
+    def _decide_tiers(self, now: float) -> None:
+        kept: Dict[int, TierDecision] = {}
+        for jobs in self.plan.job_order.values():
+            if not jobs:
+                continue
+            job = jobs[0]                       # only currently-served jobs
+            req = job.current
+            if req is None:
+                continue
+            if self._tier_decided.get(job.job_id) == (req.round_index, req.aborted):
+                prev = self.tier_decisions.get(id(req))
+                if prev is not None:            # decision is per-request
+                    kept[id(req)] = prev
+                continue
+            prof = self.profiles.setdefault(job.job_id, JobProfile())
+            group = self.groups[job.requirement.name]
+            rate = group.alloc_rate
+            t_sched = req.remaining / rate if rate > 0 else float("inf")
+            t_resp = self._response_estimate(job, prof)
+            d = self.matcher.decide(job, prof, t_sched, t_resp)
+            self._tier_decided[job.job_id] = (req.round_index, req.aborted)
+            if d.tiered:
+                kept[id(req)] = d
+        self.tier_decisions = kept
+
+    # ------------------------------------------------------------ estimates
+
+    def _response_estimate(self, job: Job, prof: JobProfile) -> float:
+        if prof.n >= 8:
+            rts = prof.sorted_rts()
+            return rts[min(len(rts) - 1, int(0.95 * len(rts)))]
+        # log-normal prior: p95 = exp(mu + 1.645 sigma)
+        return job.task_time_mean * math.exp(1.645 * job.task_time_sigma)
+
+    def _solo_jct(self, job: Job) -> float:
+        g = self.groups.get(job.requirement.name)
+        rate = g.supply if g and g.supply > 0 else self.supply.prior_rate
+        prof = self.profiles.setdefault(job.job_id, JobProfile())
+        per_round = job.demand_per_round / rate + self._response_estimate(job, prof)
+        return max(job.remaining_rounds, 1) * per_round
+
+    # -------------------------------------------------------------- ablation
+
+    def _fifo_plan(self, groups: List[JobGroup], atoms) -> SchedulePlan:
+        plan = SchedulePlan(groups=list(groups))
+        for g in groups:
+            order = sorted(g.pending_jobs(),
+                           key=lambda j: (j.current.submit_time, j.job_id))  # type: ignore[union-attr]
+            plan.job_order[g.requirement.name] = order
+        for a in atoms:
+            elig = [g for g in groups if a in g.eligible_atoms]
+            elig.sort(key=lambda g: min((j.current.submit_time for j in g.pending_jobs()
+                                         if j.current), default=float("inf")))
+            plan.atom_priority[a] = elig
+            for g in elig[:1]:
+                g.allocation[a] = g.atom_rate(a)
+        return plan

@@ -1,0 +1,77 @@
+"""Dynamic resource supply estimation (§4.4).
+
+Device availability is strongly diurnal (Figure 2a), so momentary rates are a
+bad input for the scheduler.  Venn records each device check-in (with its
+eligibility atom) in a time-series store and uses the **average eligible rate
+over a trailing 24-hour window** as the representative supply |S_j| of each job
+group — a farsighted estimate robust to the time of day.
+"""
+from __future__ import annotations
+
+from collections import defaultdict, deque
+from typing import Deque, Dict, FrozenSet, Iterable, Tuple
+
+AtomKey = FrozenSet[str]
+
+DAY = 24 * 3600.0
+
+
+class SupplyEstimator:
+    """Sliding-window per-atom check-in rate estimator.
+
+    Events are stored per atom in a deque of (time, count) buckets; querying
+    evicts entries older than ``window``.  A configurable ``prior_rate`` seeds
+    estimates before any data is seen (cold start).
+    """
+
+    def __init__(self, window: float = DAY, prior_rate: float = 0.1,
+                 bucket: float = 60.0):
+        self.window = float(window)
+        self.prior_rate = float(prior_rate)
+        self.bucket = float(bucket)
+        self._events: Dict[AtomKey, Deque[Tuple[float, int]]] = defaultdict(deque)
+        self._counts: Dict[AtomKey, int] = defaultdict(int)
+        self._t0: float = 0.0
+        self._now: float = 0.0
+
+    # ------------------------------------------------------------------ I/O
+
+    def record(self, atom: AtomKey, time: float) -> None:
+        self._now = max(self._now, time)
+        q = self._events[atom]
+        b = self.bucket
+        tb = (time // b) * b
+        if q and q[-1][0] == tb:
+            q[-1] = (tb, q[-1][1] + 1)
+        else:
+            q.append((tb, 1))
+        self._counts[atom] += 1
+        self._evict(atom)
+
+    def advance(self, time: float) -> None:
+        self._now = max(self._now, time)
+
+    def _evict(self, atom: AtomKey) -> None:
+        q = self._events[atom]
+        horizon = self._now - self.window
+        while q and q[0][0] < horizon:
+            _, c = q.popleft()
+            self._counts[atom] -= c
+
+    # -------------------------------------------------------------- queries
+
+    def rate(self, atom: AtomKey) -> float:
+        """Estimated check-in rate (devices/sec) for one atom."""
+        self._evict(atom)
+        span = min(self.window, max(self._now - self._t0, self.bucket))
+        n = self._counts.get(atom, 0)
+        if n == 0:
+            return self.prior_rate
+        return n / span
+
+    def rate_of_atoms(self, atoms: Iterable[AtomKey]) -> float:
+        """|S_j|: aggregate eligible rate over a union of atoms."""
+        return sum(self.rate(a) for a in set(atoms))
+
+    def known_atoms(self) -> Tuple[AtomKey, ...]:
+        return tuple(a for a, q in self._events.items() if q)

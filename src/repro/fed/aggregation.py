@@ -1,0 +1,77 @@
+"""Server-side aggregation: FedAvg / FedAdam over collected client deltas.
+
+The aggregation hot path uses the fused Pallas ``fedavg_reduce`` kernel per
+parameter tensor (one HBM sweep of the stacked deltas instead of K AXPYs);
+``use_kernel=False`` falls back to the jnp reference (used for equivalence
+tests and tiny tensors).
+
+FedAdam (Reddi et al.) treats the aggregated delta as a pseudo-gradient fed
+to a server Adam — the standard production choice for cross-device LMs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops as kernel_ops
+from ..kernels.ref import fedavg_reduce_ref
+from ..train.optimizer import AdamW, AdamWState
+
+
+def aggregate_deltas(deltas: Sequence[Any], weights: Sequence[float], *,
+                     use_kernel: bool = True, min_kernel_size: int = 1024
+                     ) -> Any:
+    """Weighted-normalized mean of client delta pytrees."""
+    assert len(deltas) == len(weights) and deltas
+    w = jnp.asarray(weights, jnp.float32)
+    leaves_list = [jax.tree.leaves(d) for d in deltas]
+    treedef = jax.tree.structure(deltas[0])
+    out_leaves = []
+    for i in range(len(leaves_list[0])):
+        stack = jnp.stack([ls[i].reshape(-1) for ls in leaves_list])  # (K, N)
+        if use_kernel and stack.shape[1] >= min_kernel_size:
+            flat = kernel_ops.fedavg_reduce(stack, w)
+        else:
+            flat = fedavg_reduce_ref(stack, w)
+        out_leaves.append(flat.reshape(leaves_list[0][i].shape))
+    return jax.tree.unflatten(treedef, out_leaves)
+
+
+@dataclass
+class FedAvg:
+    """params <- params + server_lr * aggregate(deltas)."""
+    server_lr: float = 1.0
+
+    def init(self, params: Any) -> Any:
+        return None
+
+    def apply(self, params: Any, agg_delta: Any, state: Any
+              ) -> Tuple[Any, Any]:
+        new = jax.tree.map(
+            lambda p, d: (p.astype(jnp.float32)
+                          + self.server_lr * d).astype(p.dtype),
+            params, agg_delta)
+        return new, state
+
+
+@dataclass
+class FedAdam:
+    """Server Adam on the aggregated delta as pseudo-gradient."""
+    lr: float = 1e-2
+    b1: float = 0.9
+    b2: float = 0.99
+    eps: float = 1e-4
+
+    def init(self, params: Any) -> AdamWState:
+        return AdamW(lr=self.lr, b1=self.b1, b2=self.b2, eps=self.eps,
+                     weight_decay=0.0, grad_clip=0.0).init(params)
+
+    def apply(self, params: Any, agg_delta: Any, state: AdamWState
+              ) -> Tuple[Any, AdamWState]:
+        pseudo_grad = jax.tree.map(lambda d: -d, agg_delta)
+        opt = AdamW(lr=self.lr, b1=self.b1, b2=self.b2, eps=self.eps,
+                    weight_decay=0.0, grad_clip=0.0)
+        return opt.update(pseudo_grad, state, params)

@@ -1,0 +1,43 @@
+"""Client-side computation plan: jitted local SGD update (Fig. 6 steps ③-④).
+
+A Venn-scheduled device receives (global params, its data shard), runs E
+local epochs of SGD, and reports the delta.  One jit per (model, steps)
+serves every client — devices differ only in data and speed, which the
+simulator models; the math is shared.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import Model
+from ..train.optimizer import SGD
+
+
+def make_local_update(model: Model, *, lr: float = 0.05, momentum: float = 0.0,
+                      local_steps: int = 1):
+    """Returns jitted fn(params, batches) -> (delta, metrics).
+
+    batches: pytree with leading axis = local_steps (one minibatch per step).
+    delta = params_after - params_before (the FedAvg update unit).
+    """
+    opt = SGD(lr=lr, momentum=momentum)
+
+    @jax.jit
+    def local_update(params, batches):
+        def step(carry, batch):
+            p, s = carry
+            loss, grads = jax.value_and_grad(model.loss_fn)(p, batch)
+            p, s = opt.update(grads, s, p)
+            return (p, s), loss
+        (new_params, _), losses = jax.lax.scan(
+            step, (params, opt.init(params)), batches)
+        delta = jax.tree.map(lambda a, b: (a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)),
+                             new_params, params)
+        return delta, {"loss_first": losses[0], "loss_last": losses[-1]}
+
+    return local_update

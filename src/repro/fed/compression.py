@@ -1,0 +1,97 @@
+"""Gradient/update compression for the client→server uplink.
+
+Two composable schemes (both cited by the paper as response-collection-time
+optimizations, §2.3/§6):
+
+* int8 block quantization (FedPAQ-style) — Pallas kernel backed, ~4× uplink
+  reduction at <0.5% relative error;
+* top-k sparsification — keep the k largest-|.| entries per tensor with
+  error feedback left to the caller.
+
+``compress``/``decompress`` round-trip pytrees; tests assert reconstruction
+error bounds and exact index fidelity.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops as kernel_ops
+
+
+@dataclass(frozen=True)
+class QuantizeConfig:
+    block: int = 256
+    enabled: bool = True
+
+
+def compress(tree: Any, cfg: QuantizeConfig = QuantizeConfig()) -> Any:
+    """pytree of f32 -> pytree of {"q", "scales", "shape", "pad"}."""
+    if not cfg.enabled:
+        return tree
+
+    def one(x):
+        flat = x.reshape(-1).astype(jnp.float32)
+        pad = (-flat.shape[0]) % cfg.block
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        q, s = kernel_ops.quantize(flat, block=cfg.block,
+                                   rows_per_tile=1)
+        return {"q": q, "scales": s, "shape": x.shape, "pad": pad}
+
+    return jax.tree.map(one, tree)
+
+
+def decompress(tree: Any, cfg: QuantizeConfig = QuantizeConfig()) -> Any:
+    if not cfg.enabled:
+        return tree
+
+    def is_packed(x):
+        return isinstance(x, dict) and set(x) == {"q", "scales", "shape", "pad"}
+
+    def one(x):
+        flat = kernel_ops.dequantize(x["q"], x["scales"], block=cfg.block,
+                                     rows_per_tile=1)
+        n = 1
+        for d in x["shape"]:
+            n *= d
+        return flat[:n].reshape(x["shape"])
+
+    return jax.tree.map(one, tree, is_leaf=is_packed)
+
+
+def compressed_bytes(tree: Any) -> int:
+    def is_packed(x):
+        return isinstance(x, dict) and set(x) == {"q", "scales", "shape", "pad"}
+    total = 0
+    for leaf in jax.tree.leaves(tree, is_leaf=is_packed):
+        if is_packed(leaf):
+            total += leaf["q"].size + leaf["scales"].size * 4
+        else:
+            total += leaf.size * leaf.dtype.itemsize
+    return total
+
+
+def topk_sparsify(tree: Any, frac: float = 0.01) -> Any:
+    """Keep the top-frac |values| per tensor: {"idx", "val", "shape"}."""
+    def one(x):
+        flat = x.reshape(-1)
+        k = max(1, int(frac * flat.shape[0]))
+        val, idx = jax.lax.top_k(jnp.abs(flat), k)
+        return {"idx": idx, "val": flat[idx], "shape": x.shape}
+    return jax.tree.map(one, tree)
+
+
+def topk_densify(tree: Any) -> Any:
+    def is_packed(x):
+        return isinstance(x, dict) and set(x) == {"idx", "val", "shape"}
+    def one(x):
+        n = 1
+        for d in x["shape"]:
+            n *= d
+        flat = jnp.zeros((n,), x["val"].dtype).at[x["idx"]].set(x["val"])
+        return flat.reshape(x["shape"])
+    return jax.tree.map(one, tree, is_leaf=is_packed)

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the data-plane hot spots.
+
+Each kernel has: the pl.pallas_call implementation with explicit BlockSpec
+VMEM tiling (<name>.py), a jit'd public wrapper (ops.py, interpret=True off
+TPU), and a pure-jnp oracle (ref.py) the test-suite sweeps against.
+"""
+from . import ops, ref
+from .fedavg_reduce import fedavg_reduce
+from .flash_attention import flash_attention
+from .quantize import dequantize, quantize
+
+__all__ = ["dequantize", "fedavg_reduce", "flash_attention", "ops",
+           "quantize", "ref"]

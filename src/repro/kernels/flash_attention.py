@@ -1,0 +1,110 @@
+"""Flash attention Pallas-TPU kernel: causal / sliding-window GQA.
+
+TPU adaptation (not a CUDA port): the grid is (batch, q_heads, Tq/bq, Tk/bk)
+with the KV-block axis minor-most — on TPU, grid steps execute *sequentially*
+per core, so the online-softmax state (running max m, normalizer l, output
+accumulator acc) lives in VMEM scratch across KV steps and is flushed to HBM
+once per Q block on the last KV step.  GQA is handled in the BlockSpec index
+map (query head h reads KV head h // group) so grouped KV is never
+materialized H-wide.  Block shapes default to (128, 128) — MXU-aligned on
+both matmul dims; all accumulation is fp32.
+
+Masking: per-element position masks from ``broadcasted_iota`` implement
+causal and sliding-window in one kernel.  Fully-masked (q, k) block pairs are
+still visited — grid pruning is listed as future work in EXPERIMENTS §Perf.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: int, bq: int, bk: int,
+            n_kv: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bk)
+
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    rel = qpos - kpos
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= rel >= 0
+    if window > 0:
+        mask &= rel < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+    v = v_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _flush():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, T, H, D); k/v: (B, S, Hkv, D) -> (B, T, H, D)."""
+    B, T, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    assert H % Hkv == 0, (H, Hkv)
+    group = H // Hkv
+    bq, bk = min(block_q, T), min(block_k, S)
+    assert T % bq == 0 and S % bk == 0, (T, S, bq, bk)
+    n_kv = S // bk
+    scale = 1.0 / math.sqrt(D)
+
+    qt = q.transpose(0, 2, 1, 3)        # (B, H, T, D)
+    kt = k.transpose(0, 2, 1, 3)        # (B, Hkv, S, D)
+    vt = v.transpose(0, 2, 1, 3)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, window=window,
+                          bq=bq, bk=bk, n_kv=n_kv),
+        grid=(B, H, T // bq, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, qi, ki, g=group: (b, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, qi, ki, g=group: (b, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, T, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),       # running max
+            pltpu.VMEM((bq,), jnp.float32),       # normalizer
+            pltpu.VMEM((bq, D), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,57 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container) so the same call
+sites work everywhere: on TPU the kernels lower to Mosaic; on CPU they run
+the kernel body in the Pallas interpreter — bit-identical logic, used by the
+test-suite against the ref.py oracles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .fedavg_reduce import fedavg_reduce as _fedavg
+from .flash_attention import flash_attention as _flash
+from .quantize import dequantize as _dequant, quantize as _quant
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _flash(q, k, v, causal=causal, window=window, block_q=block_q,
+                  block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_k", "interpret"))
+def fedavg_reduce(updates, weights, *, block_n: int = 2048, block_k: int = 8,
+                  interpret: bool = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _fedavg(updates, weights, block_n=block_n, block_k=block_k,
+                   interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "rows_per_tile",
+                                             "interpret"))
+def quantize(x, *, block: int = 256, rows_per_tile: int = 64,
+             interpret: bool = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _quant(x, block=block, rows_per_tile=rows_per_tile,
+                  interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "rows_per_tile",
+                                             "dtype", "interpret"))
+def dequantize(q, scales, *, block: int = 256, rows_per_tile: int = 64,
+               dtype=jnp.float32, interpret: bool = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _dequant(q, scales, block=block, rows_per_tile=rows_per_tile,
+                    dtype=dtype, interpret=interpret)

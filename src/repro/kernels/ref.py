@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function is the mathematical definition with no tiling/layout tricks;
+tests sweep shapes/dtypes and assert kernels (interpret=True on CPU) match.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0) -> jax.Array:
+    """q: (B, T, H, D); k/v: (B, S, Hkv, D).  GQA by head repetition."""
+    B, T, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    if Hkv != H:
+        k = jnp.repeat(k, H // Hkv, axis=2)
+        v = jnp.repeat(v, H // Hkv, axis=2)
+    s = jnp.einsum("bthd,bshd->bhts", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    qpos = jnp.arange(T)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    rel = qpos - kpos
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= rel >= 0
+    if window > 0:
+        mask &= rel < window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)          # fully-masked rows
+    o = jnp.einsum("bhts,bshd->bthd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def fedavg_reduce_ref(updates: jax.Array, weights: jax.Array) -> jax.Array:
+    """updates: (K, N); weights: (K,).  Normalized weighted aggregation:
+    the FedAvg server step  Δ = Σ_k (n_k / Σn) Δ_k  fused in fp32."""
+    w = weights.astype(jnp.float32)
+    w = w / jnp.maximum(w.sum(), 1e-12)
+    return jnp.einsum("k,kn->n", w, updates.astype(jnp.float32)).astype(
+        updates.dtype)
+
+
+def quantize_ref(x: jax.Array, block: int = 256
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-block int8 quantization.  x: (N,) with N % block == 0.
+    Returns (q: int8 (N,), scales: f32 (N/block,))."""
+    xb = x.astype(jnp.float32).reshape(-1, block)
+    scale = jnp.max(jnp.abs(xb), axis=1) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xb / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(-1), scale
+
+
+def dequantize_ref(q: jax.Array, scales: jax.Array, block: int = 256,
+                   dtype=jnp.float32) -> jax.Array:
+    xb = q.astype(jnp.float32).reshape(-1, block) * scales[:, None]
+    return xb.reshape(-1).astype(dtype)

@@ -1,0 +1,265 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST run before any jax import: jax locks the device
+count at first initialization, and this process needs 512 placeholder host
+devices to build the production meshes.  (Do not set this flag globally —
+smoke tests and benchmarks must see 1 device.)
+
+Per cell this program:
+
+1. builds the production mesh (16×16 single pod / 2×16×16 multi-pod),
+2. lowers + compiles the step function (train_step / prefill_step /
+   serve decode_step) with the arch's sharding rules,
+3. prints ``compiled.memory_analysis()`` (does it fit?) and
+   ``compiled.cost_analysis()`` (FLOPs/bytes for §Roofline),
+4. lowers each scan *block* under the same shardings and composes the
+   scan-aware roofline terms (compute / memory / collective),
+5. appends one JSON record to --out.
+
+Usage:
+    python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k \
+        --mesh single --out results/dryrun.json
+    python -m repro.launch.dryrun --all --mesh both   # every runnable cell
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, SHAPES, get_config
+from ..dist.sharding import (DEFAULT_RULES, LONG_CONTEXT_RULES, Rules,
+                             dp_axes, param_shardings, replicated)
+from ..models.model import build_model
+from ..train.train_step import (make_decode_step, make_prefill_step,
+                                make_train_step)
+from .mesh import HBM_BYTES, make_production_mesh
+from .roofline import (GraphCost, analytic_model_flops, graph_cost,
+                       roofline_terms)
+
+RULE_SETS: Dict[str, Any] = {}   # populated lazily (perf-pass variants)
+
+
+def _rules_for(cfg, shape, rules_name: str) -> Rules:
+    from ..dist import sharding as S
+    S.set_dp_override(S.DP_AXES_BY_RULESET.get(rules_name, ()))
+    if rules_name != "default":
+        return getattr(S, rules_name.upper() + "_RULES")
+    if shape.kind == "decode" and shape.global_batch == 1:
+        return LONG_CONTEXT_RULES
+    return DEFAULT_RULES
+
+
+def _batch_shardings(mesh, batch: Dict[str, Any]):
+    dp = dp_axes(mesh)
+    out = {}
+    for k, v in batch.items():
+        nd = len(v.shape)
+        divisible = v.shape[0] % _axes_size(mesh, dp) == 0 if nd else False
+        out[k] = NamedSharding(mesh, P(dp, *([None] * (nd - 1)))) if divisible \
+            else replicated(mesh)
+    return out
+
+
+def _axes_size(mesh, axes):
+    s = 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for a in axes:
+        s *= sizes[a]
+    return s
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             rules_name: str = "default", remat: bool = True,
+             microbatch: int = 1, verbose: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = cfg.supports(shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped", "reason": reason}
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.devices.size
+    model = build_model(cfg)
+    rules = _rules_for(cfg, shape, rules_name)
+    t0 = time.time()
+
+    with mesh:
+        if shape.kind == "train":
+            fn, specs = make_train_step(cfg, mesh, rules=rules, remat=remat,
+                                        microbatch=microbatch)
+            batch = model.input_specs(shape.seq_len, shape.global_batch, "train")
+            in_sh = (specs["params_shardings"], specs["opt_shardings"],
+                     _batch_shardings(mesh, batch))
+            args = (specs["abstract_params"], specs["abstract_opt"], batch)
+            jitted = jax.jit(fn, in_shardings=in_sh, donate_argnums=(0, 1))
+        elif shape.kind == "prefill":
+            fn, specs = make_prefill_step(cfg, mesh, rules=rules)
+            batch = model.input_specs(shape.seq_len, shape.global_batch, "prefill")
+            in_sh = (specs["params_shardings"], _batch_shardings(mesh, batch))
+            args = (specs["abstract_params"], batch)
+            jitted = jax.jit(fn, in_shardings=in_sh)
+        else:  # decode
+            fn, specs = make_decode_step(cfg, mesh, rules=rules,
+                                         cache_batch=shape.global_batch,
+                                         cache_seq=shape.seq_len)
+            dec = model.input_specs(shape.seq_len, shape.global_batch, "decode")
+            tok_sh = _batch_shardings(mesh, {"token": dec["token"]})["token"]
+            in_sh = (specs["params_shardings"], specs["cache_shardings"],
+                     tok_sh, replicated(mesh))
+            args = (specs["abstract_params"], specs["abstract_caches"],
+                    dec["token"], dec["cache_len"])
+            jitted = jax.jit(fn, in_shardings=in_sh, donate_argnums=(1,))
+
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        ma = compiled.memory_analysis()
+        if verbose:
+            print(f"[{arch} × {shape_name} × {mesh_kind}] memory_analysis:")
+            print(f"  args/dev   = {ma.argument_size_in_bytes/2**30:8.3f} GiB")
+            print(f"  output/dev = {ma.output_size_in_bytes/2**30:8.3f} GiB")
+            print(f"  temp/dev   = {ma.temp_size_in_bytes/2**30:8.3f} GiB")
+            print(f"  code       = {ma.generated_code_size_in_bytes/2**20:8.3f} MiB")
+        peak = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+        full_cost = graph_cost(compiled)
+        if verbose:
+            ca = compiled.cost_analysis()
+            print(f"  cost_analysis: flops/dev={full_cost.flops:.3e} "
+                  f"bytes/dev={full_cost.bytes_accessed:.3e}")
+            print(f"  collectives: {full_cost.collectives.counts}")
+
+        # ---- scan-aware composition: add (count-1) × block cost ----------
+        total = full_cost
+        blocks_meta = []
+        for blk in model.block_fns(shape.kind, shape.seq_len,
+                                   shape.global_batch, remat=remat):
+            bc, meta = _block_cost(blk, cfg, mesh, rules, shape)
+            total = total + bc.scaled(blk["count"] - 1)
+            blocks_meta.append(meta)
+
+    n_active = model.n_active_params()
+    mf = analytic_model_flops(cfg, shape.seq_len, shape.global_batch,
+                              shape.kind, model.n_params(), n_active)
+    roof = roofline_terms(total, n_dev, mf)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "rules": rules_name, "status": "ok",
+        "n_devices": n_dev,
+        "n_params": model.n_params(), "n_active_params": n_active,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "args_bytes_per_dev": ma.argument_size_in_bytes,
+            "output_bytes_per_dev": ma.output_size_in_bytes,
+            "temp_bytes_per_dev": ma.temp_size_in_bytes,
+            "peak_bytes_per_dev": peak,
+            "fits_hbm": bool(peak <= HBM_BYTES),
+        },
+        "full_graph": {
+            "flops_per_dev": full_cost.flops,
+            "bytes_per_dev": full_cost.bytes_accessed,
+            "collectives": full_cost.collectives.counts,
+            "link_bytes_per_dev": full_cost.collectives.link_bytes,
+        },
+        "collective_by_op": total.collectives.by_op,
+        "blocks": blocks_meta,
+        "roofline": roof.as_dict(),
+    }
+    if verbose:
+        print(f"  roofline: compute={roof.compute_s*1e3:.2f}ms "
+              f"memory={roof.memory_s*1e3:.2f}ms "
+              f"collective={roof.collective_s*1e3:.2f}ms "
+              f"-> bottleneck={roof.bottleneck} "
+              f"(useful_ratio={roof.useful_ratio:.2f}, "
+              f"mfu_bound={roof.mfu_bound:.2%})")
+        print(f"  lower={t_lower:.1f}s compile={t_compile:.1f}s "
+              f"peak/dev={peak/2**30:.2f} GiB fits_v5e={peak <= HBM_BYTES}")
+    return rec
+
+
+def _block_cost(blk, cfg, mesh, rules, shape):
+    """Lower one scan block under full-graph shardings; return its cost."""
+    ab = dict(blk["abstract"])
+    cache_spec = ab.pop("cache_spec", None)
+    bp_sh = param_shardings(blk["block_spec"], mesh, rules)
+    dp = dp_axes(mesh)
+    sh: Dict[str, Any] = {"bp": bp_sh}
+    for k in ("x", "vis"):
+        if k in ab:
+            b = ab[k].shape[0]
+            sh[k] = (NamedSharding(mesh, P(dp, None, None))
+                     if b % _axes_size(mesh, dp) == 0 else replicated(mesh))
+    if "cache" in ab:
+        sh["cache"] = param_shardings(cache_spec, mesh, rules)
+        sh["cache_len"] = replicated(mesh)
+    order = [k for k in ("bp", "cache", "x", "vis", "cache_len") if k in ab]
+    args = tuple(ab[k] for k in order)
+    in_sh = tuple(sh[k] for k in order)
+    comp = jax.jit(blk["fn"], in_shardings=in_sh).lower(*args).compile()
+    cost = graph_cost(comp)
+    return cost, {"name": blk["name"], "count": blk["count"],
+                  "flops_per_dev": cost.flops,
+                  "bytes_per_dev": cost.bytes_accessed,
+                  "link_bytes_per_dev": cost.collectives.link_bytes}
+
+
+def iter_cells(mesh_kind: str):
+    meshes = ["single", "multi"] if mesh_kind == "both" else [mesh_kind]
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape_name in SHAPES:
+            ok, _ = cfg.supports(shape_name)
+            for mk in meshes:
+                yield arch, shape_name, mk, ok
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--rules", default="default")
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    records = []
+    if args.all:
+        cells = [(a, s, m) for a, s, m, ok in iter_cells(args.mesh) if ok]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+        cells = [(args.arch, args.shape, m) for m in meshes]
+
+    failures = 0
+    for arch, shape_name, mk in cells:
+        try:
+            rec = run_cell(arch, shape_name, mk, rules_name=args.rules,
+                           remat=not args.no_remat, microbatch=args.microbatch)
+        except Exception as e:                              # noqa: BLE001
+            traceback.print_exc()
+            rec = {"arch": arch, "shape": shape_name, "mesh": mk,
+                   "status": "error", "error": f"{type(e).__name__}: {e}"}
+            failures += 1
+        records.append(rec)
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+    print(f"dry-run: {len(records) - failures}/{len(records)} cells ok")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,37 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (jax locks the backend/device count at first use; dryrun.py must set
+XLA_FLAGS before any jax initialization).
+
+Topology: TPU v5e, 256 chips per pod arranged (16, 16); the multi-pod mesh
+adds a leading "pod" axis (2, 16, 16) = 512 chips across DCN.  The "pod"
+axis carries pure data parallelism in the baseline layout (gradients
+all-reduce across pods once per step); "data" carries batch + FSDP; "model"
+carries TP/EP.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model: int = 1):
+    """Smoke-scale mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    model = min(model, n)
+    return jax.make_mesh((n // model, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+# v5e hardware constants used by the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+ICI_BW = 50e9                     # B/s per link (~per-device collective bw)
+HBM_BYTES = 16 * 2 ** 30          # 16 GiB HBM per v5e chip

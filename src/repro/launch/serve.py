@@ -1,0 +1,52 @@
+"""Batched serving driver: prefill + decode with KV caches.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b-smoke \
+        --batch 4 --prompt 32 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config
+from ..models.model import build_model
+from ..serve.engine import Engine
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b-smoke")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if cfg.is_encoder:
+        raise SystemExit(f"{cfg.name} is encoder-only: no decode serving")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, (args.batch, args.prompt)), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jnp.asarray(rng.standard_normal(
+            (args.batch, cfg.vision_seq, cfg.vision_dim)), jnp.bfloat16)
+
+    eng = Engine(cfg, params, temperature=args.temperature, seed=args.seed)
+    gen, stats = eng.generate(batch, max_new=args.max_new)
+    print(f"served {cfg.name}: batch={args.batch} prompt={stats.prompt_len} "
+          f"generated={stats.generated}")
+    print(f"prefill {stats.prefill_s*1e3:.1f} ms; decode "
+          f"{stats.decode_s*1e3:.1f} ms -> {stats.tokens_per_s:.1f} tok/s/batch")
+    print("sample tokens:", gen[0][:12].tolist())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,83 @@
+"""End-to-end training driver (CPU demo scale ↔ pod scale, same code).
+
+Runs real optimization steps of any registered arch (reduced or full config)
+with checkpoint/restart: resume is automatic if the checkpoint dir has state.
+At pod scale, the identical train_step is what dryrun.py lowers — only the
+mesh differs.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b-smoke \
+        --steps 50 --batch 8 --seq 64 --ckpt-dir /tmp/ck --ckpt-every 20
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..ckpt.checkpoint import AsyncCheckpointer, latest_step, restore
+from ..configs import get_config
+from ..data.synthetic import SyntheticLM
+from ..models.model import build_model
+from ..train.optimizer import AdamW
+from .mesh import make_host_mesh
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b-smoke")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    model = build_model(cfg)
+    opt = AdamW(lr=args.lr)
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq, seed=args.seed)
+
+    params = model.init_params(jax.random.PRNGKey(args.seed))
+    state = opt.init(params)
+    start = 0
+    ckpt = AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
+    if ckpt and latest_step(args.ckpt_dir) is not None:
+        (params, state), manifest = restore(args.ckpt_dir, (params, state))
+        start = manifest["step"] + 1
+        print(f"resumed from step {manifest['step']}")
+
+    @jax.jit
+    def step_fn(p, s, batch):
+        loss, grads = jax.value_and_grad(model.loss_fn)(p, batch)
+        p2, s2 = opt.update(grads, s, p)
+        return loss, p2, s2
+
+    print(f"training {cfg.name}: {model.n_params():,} params "
+          f"({model.n_active_params():,} active), {len(jax.devices())} devices")
+    t0 = time.time()
+    tokens = 0
+    for i in range(start, args.steps):
+        batch = {k: jnp.asarray(v)
+                 for k, v in data.batch(args.batch, seed=i).items()}
+        loss, params, state = step_fn(params, state, batch)
+        tokens += args.batch * args.seq
+        if i % args.log_every == 0 or i == args.steps - 1:
+            dt = time.time() - t0
+            print(f"step {i:5d} loss {float(loss):7.4f} "
+                  f"tok/s {tokens/max(dt,1e-9):9.0f}")
+        if ckpt and (i + 1) % args.ckpt_every == 0:
+            ckpt.save(i, (params, state))
+    if ckpt:
+        ckpt.save(args.steps - 1, (params, state))
+        ckpt.wait()
+    print(f"done in {time.time()-t0:.1f}s; final loss {float(loss):.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,228 @@
+"""Attention: chunked (flash-style) softmax attention in sharding-friendly
+pure JAX, with GQA, causal/bidirectional masks, sliding windows, logit
+soft-capping (gemma2), qk-norm (qwen3), and DeepSeek MLA (latent KV).
+
+Why chunked: XLA:CPU/TPU will not re-tile a materialized (T, T) score tensor;
+at 32k context that is O(1G) elements per head.  ``chunked_attention`` scans
+over KV chunks with an online softmax (running max / normalizer), keeping the
+live working set to (Tq, chunk).  The Pallas kernel in ``repro.kernels``
+implements the same contraction for the TPU MXU with explicit VMEM BlockSpecs;
+this module is the GSPMD-partitionable reference path used by the dry-run.
+
+Sharding notes (16-way model axis): q heads are always sharded (every assigned
+arch has n_heads % 16 == 0); KV heads are sharded only when divisible and
+replicated otherwise (``kv_repeat`` expands lazily — XLA fuses the broadcast
+into the score einsum).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import softcap
+
+NEG_INF = -2.0 ** 30  # large-negative in f32; avoids nan from (-inf) - (-inf)
+
+
+def kv_repeat(kv: jax.Array, n_heads: int) -> jax.Array:
+    """(B, T, Hkv, D) -> (B, T, H, D) by repeating each kv head H/Hkv times."""
+    hkv = kv.shape[2]
+    if hkv == n_heads:
+        return kv
+    return jnp.repeat(kv, n_heads // hkv, axis=2)
+
+
+def _mask(qpos: jax.Array, kpos: jax.Array, causal: bool,
+          window: int) -> jax.Array:
+    """(Tq, Ck) validity mask from absolute positions."""
+    rel = qpos[:, None] - kpos[None, :]
+    m = jnp.ones(rel.shape, dtype=bool)
+    if causal:
+        m &= rel >= 0
+    if window > 0:
+        m &= rel < window
+    return m
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: int = 0,
+                      attn_softcap: float = 0.0, kv_chunk: int = 2048,
+                      q_offset: int = 0) -> jax.Array:
+    """Online-softmax attention over KV chunks.
+
+    q: (B, Tq, H, D); k/v: (B, Tk, Hkv, D).  Returns (B, Tq, H, D).
+    ``q_offset``: absolute position of q[0] (prefill continuation).
+    """
+    B, Tq, H, D = q.shape
+    Tk = k.shape[1]
+    Dv = v.shape[-1]                     # may differ from D (MLA)
+    k = kv_repeat(k, H)
+    v = kv_repeat(v, H)
+    scale = 1.0 / math.sqrt(D)
+    nchunk = max(1, math.ceil(Tk / kv_chunk))
+    c = Tk // nchunk if Tk % nchunk == 0 else kv_chunk
+    # pad Tk to a multiple of the chunk (padded keys are masked by position)
+    pad = (-Tk) % c
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n = (Tk + pad) // c
+    kc = k.reshape(B, n, c, H, D).transpose(1, 0, 2, 3, 4)   # (n, B, c, H, D)
+    vc = v.reshape(B, n, c, H, Dv).transpose(1, 0, 2, 3, 4)
+    qpos = q_offset + jnp.arange(Tq)
+    qf = q.astype(jnp.float32) * scale
+
+    def step(carry, xs):
+        m, l, acc = carry
+        idx, kb, vb = xs
+        kpos = idx * c + jnp.arange(c)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kb.astype(jnp.float32))
+        if attn_softcap > 0:
+            s = softcap(s, attn_softcap)
+        valid = _mask(qpos, kpos, causal, window) & (kpos < Tk)[None, :]
+        s = jnp.where(valid[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Tq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Tq), jnp.float32)
+    a0 = jnp.zeros((B, H, Tq, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (jnp.arange(n), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)         # (B, Tq, H, D)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, *,
+                     cache_len: jax.Array, window: int = 0,
+                     attn_softcap: float = 0.0) -> jax.Array:
+    """Single-position attention against a (possibly ring) KV cache.
+
+    q: (B, 1, H, D); k/v_cache: (B, S, Hkv, D); cache_len: () or (B,) — number
+    of valid entries.  For sliding-window caches (S == window) the ring layout
+    is position-agnostic because softmax is permutation-invariant over keys.
+    """
+    B, _, H, D = q.shape
+    S = k_cache.shape[1]
+    k = kv_repeat(k_cache, H)
+    v = kv_repeat(v_cache, H)
+    scale = 1.0 / math.sqrt(D)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    if attn_softcap > 0:
+        s = softcap(s, attn_softcap)
+    pos = jnp.arange(S)
+    valid = pos[None, :] < jnp.reshape(cache_len, (-1, 1))     # (B, S)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ----------------------------------------------------------------------- MLA
+
+class MLAWeights(NamedTuple):
+    """DeepSeek-V3 Multi-head Latent Attention projection set (fp paths in
+    the model module; this is just a shape contract)."""
+    w_dq: jax.Array      # (d_model, q_lora)
+    q_norm: jax.Array    # (q_lora,)
+    w_uq: jax.Array      # (q_lora, H * (nope + rope))
+    w_dkv: jax.Array     # (d_model, kv_lora)
+    kv_norm: jax.Array   # (kv_lora,)
+    w_kr: jax.Array      # (d_model, rope)
+    w_uk: jax.Array      # (kv_lora, H * nope)
+    w_uv: jax.Array      # (kv_lora, H * v_dim)
+    w_o: jax.Array       # (H * v_dim, d_model)
+
+
+def mla_attention(x: jax.Array, w: MLAWeights, *, n_heads: int, nope: int,
+                  rope_dim: int, v_dim: int, rope_theta: float,
+                  q_offset: int = 0, kv_chunk: int = 2048,
+                  norm_eps: float = 1e-6) -> Tuple[jax.Array, jax.Array]:
+    """MLA for train/prefill.  Returns (output, latent_cache) where the cache
+    is the concatenated (kv_latent, k_rope) of shape (B, T, kv_lora + rope)."""
+    from .common import apply_rope, rms_norm
+    B, T, _ = x.shape
+    H = n_heads
+    pos = q_offset + jnp.arange(T)
+
+    cq = rms_norm(x @ w.w_dq, w.q_norm, norm_eps)
+    q = (cq @ w.w_uq).reshape(B, T, H, nope + rope_dim)
+    qn, qr = q[..., :nope], q[..., nope:]
+    qr = apply_rope(qr, pos[None, :], rope_theta)
+
+    latent = rms_norm(x @ w.w_dkv, w.kv_norm, norm_eps)        # (B, T, r)
+    kr = apply_rope((x @ w.w_kr).reshape(B, T, 1, rope_dim), pos[None, :],
+                    rope_theta)
+    kn = (latent @ w.w_uk).reshape(B, T, H, nope)
+    v = (latent @ w.w_uv).reshape(B, T, H, v_dim)
+
+    q_full = jnp.concatenate([qn, qr], axis=-1)
+    k_full = jnp.concatenate([kn, jnp.broadcast_to(kr, (B, T, H, rope_dim))],
+                             axis=-1)
+    # standard scaled-dot attention over the (nope+rope) dims
+    out = chunked_attention(q_full, k_full, v, causal=True, kv_chunk=kv_chunk,
+                            q_offset=q_offset)
+    y = out.reshape(B, T, H * v_dim) @ w.w_o
+    cache = jnp.concatenate([latent, kr[:, :, 0, :]], axis=-1)
+    return y, cache
+
+
+def mla_decode(x: jax.Array, w: MLAWeights, cache: jax.Array, *,
+               cache_len: jax.Array, n_heads: int, nope: int, rope_dim: int,
+               v_dim: int, rope_theta: float, norm_eps: float = 1e-6
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Absorbed-projection MLA decode: score/value computed directly against
+    the latent cache (the DeepSeek-V3 inference trick — no per-head K/V ever
+    materializes).  x: (B, 1, d); cache: (B, S, r + rope).  Returns (y, new
+    cache entry (B, r + rope))."""
+    from .common import apply_rope, rms_norm
+    B, _, _ = x.shape
+    H = n_heads
+    r = cache.shape[-1] - rope_dim
+    scale = 1.0 / math.sqrt(nope + rope_dim)
+
+    cq = rms_norm(x @ w.w_dq, w.q_norm, norm_eps)
+    q = (cq @ w.w_uq).reshape(B, 1, H, nope + rope_dim)
+    qn, qr = q[..., :nope], q[..., nope:]
+    pos = jnp.reshape(cache_len, (-1,))
+    qr = apply_rope(qr, pos[:, None], rope_theta)
+
+    latent = rms_norm(x @ w.w_dkv, w.kv_norm, norm_eps)        # (B, 1, r)
+    kr_new = apply_rope((x @ w.w_kr).reshape(B, 1, 1, rope_dim),
+                        pos[:, None], rope_theta)[:, 0, 0, :]  # (B, rope)
+    new_entry = jnp.concatenate([latent[:, 0, :], kr_new], axis=-1)
+    cache = _place_entry(cache, new_entry, cache_len)
+
+    lat_c, kr_c = cache[..., :r], cache[..., r:]
+    # absorb W_uk into q:  q_abs (B, H, r)
+    w_uk = w.w_uk.reshape(r, H, nope)
+    q_abs = jnp.einsum("bhn,rhn->bhr", qn[:, 0], w_uk)
+    s = jnp.einsum("bhr,bsr->bhs", q_abs.astype(jnp.float32),
+                   lat_c.astype(jnp.float32))
+    s = s + jnp.einsum("bhn,bsn->bhs", qr[:, 0].astype(jnp.float32),
+                       kr_c.astype(jnp.float32))
+    S = cache.shape[1]
+    valid = jnp.arange(S)[None, :] <= jnp.reshape(cache_len, (-1, 1))
+    s = jnp.where(valid[:, None, :], s * scale, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", p, lat_c.astype(jnp.float32))
+    w_uv = w.w_uv.reshape(r, H, v_dim)
+    o = jnp.einsum("bhr,rhv->bhv", ctx.astype(x.dtype), w_uv)
+    y = o.reshape(B, 1, H * v_dim) @ w.w_o
+    return y, cache
+
+
+def _place_entry(cache: jax.Array, entry: jax.Array, idx: jax.Array) -> jax.Array:
+    """Write `entry` (B, F) at position idx (scalar) along axis 1."""
+    B, S, F = cache.shape
+    onehot = (jnp.arange(S) == jnp.reshape(idx, (-1, 1))).astype(cache.dtype)
+    return cache * (1 - onehot[..., None]) + onehot[..., None] * entry[:, None, :]

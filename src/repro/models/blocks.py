@@ -1,0 +1,432 @@
+"""Block programs: every assigned architecture as a composition of layer
+descriptors, scanned over stacked parameters.
+
+A model is a sequence of :class:`BlockGroup`s; each group is ``count`` scan
+steps over a **period** of heterogeneous layers (descriptors).  Homogeneous
+stacks (llama, qwen, mixtral, mamba2, hubert) have period 1; gemma2 scans
+(local, global) pairs; llama-vision scans 5-layer periods with one cross-attn
+layer; jamba scans 8-layer periods (1 attention : 7 mamba, MoE every 2nd);
+deepseek has a 3-layer dense prefix group before the 58-layer MoE group.
+
+Scanning over stacked params keeps HLO size O(period) instead of O(L): the
+compile-time difference at DeepSeek scale is seconds vs minutes, and the
+roofline module re-scales scan-body costs by trip count (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .attention import (MLAWeights, chunked_attention, decode_attention,
+                        mla_attention, mla_decode)
+from .common import (ParamSpec, apply_rope, layer_norm, rms_norm, softcap, spec)
+from .ffn import gated_mlp, gated_mlp_specs, mlp, mlp_specs
+from .mamba import (MambaState, init_state, mamba_block, mamba_decode,
+                    mamba_specs)
+from .moe import moe_ffn, moe_specs
+
+
+@dataclass(frozen=True)
+class LayerDesc:
+    mixer: str                  # attn | mamba | cross | none
+    ffn: str                    # mlp | moe | none
+    window: int = 0             # sliding window for this attention layer
+    causal: bool = True
+
+
+@dataclass(frozen=True)
+class BlockGroup:
+    descs: Tuple[LayerDesc, ...]
+    count: int
+
+
+def block_groups(cfg: ModelConfig) -> List[BlockGroup]:
+    fam = cfg.family
+    if fam in ("dense", "audio"):
+        causal = not cfg.is_encoder
+        if cfg.attention == "local_global":
+            local = LayerDesc("attn", "mlp", window=cfg.window, causal=causal)
+            glob = LayerDesc("attn", "mlp", window=0, causal=causal)
+            assert cfg.n_layers % 2 == 0
+            return [BlockGroup((local, glob), cfg.n_layers // 2)]
+        w = cfg.window if cfg.attention == "swa" else 0
+        return [BlockGroup((LayerDesc("attn", "mlp", window=w, causal=causal),),
+                           cfg.n_layers)]
+    if fam == "moe":
+        w = cfg.window if cfg.attention == "swa" else 0
+        groups = []
+        if cfg.n_dense_layers:
+            groups.append(BlockGroup((LayerDesc("attn", "mlp", window=w),),
+                                     cfg.n_dense_layers))
+        groups.append(BlockGroup((LayerDesc("attn", "moe", window=w),),
+                                 cfg.n_layers - cfg.n_dense_layers))
+        return groups
+    if fam == "hybrid":
+        period = cfg.attn_every
+        descs = []
+        for i in range(period):
+            mixer = "attn" if i == period // 2 else "mamba"
+            ffn = "moe" if (i % cfg.moe_every == cfg.moe_every - 1) else "mlp"
+            descs.append(LayerDesc(mixer, ffn))
+        assert cfg.n_layers % period == 0
+        return [BlockGroup(tuple(descs), cfg.n_layers // period)]
+    if fam == "vlm":
+        period = cfg.cross_attn_every
+        descs = [LayerDesc("attn", "mlp") for _ in range(period - 1)]
+        descs.insert(period - 2, LayerDesc("cross", "mlp", causal=False))
+        assert cfg.n_layers % period == 0
+        return [BlockGroup(tuple(descs), cfg.n_layers // period)]
+    if fam == "ssm":
+        return [BlockGroup((LayerDesc("mamba", "none"),), cfg.n_layers)]
+    raise ValueError(f"unknown family {fam}")
+
+
+# ----------------------------------------------------------------- specs
+
+def _norm_specs(d: int, cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    if cfg.norm == "layernorm":
+        return {"g": spec((d,), ("embed",), init="ones"),
+                "b": spec((d,), ("embed",), init="zeros")}
+    return {"g": spec((d,), ("embed",),
+                      init="zeros" if cfg.rms_plus_one else "ones")}
+
+
+def _apply_norm(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["g"], p["b"], cfg.norm_eps)
+    return rms_norm(x, p["g"], cfg.norm_eps, plus_one=cfg.rms_plus_one)
+
+
+def attn_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s: Dict[str, Any] = {
+        "wq": spec((d, h * dh), ("embed", "heads_mlp")),
+        "wk": spec((d, hkv * dh), ("embed", "heads_mlp")),
+        "wv": spec((d, hkv * dh), ("embed", "heads_mlp")),
+        "wo": spec((h * dh, d), ("heads_mlp", "embed")),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = spec((dh,), (None,), init="ones")
+        s["k_norm"] = spec((dh,), (None,), init="ones")
+    return s
+
+
+def mla_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, h = cfg.d_model, cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "w_dq": spec((d, qr), ("embed", "mla_rank")),
+        "q_norm": spec((qr,), ("mla_rank",), init="ones"),
+        "w_uq": spec((qr, h * (nope + rope)), ("mla_rank", "heads_mlp")),
+        "w_dkv": spec((d, kvr), ("embed", "mla_rank")),
+        "kv_norm": spec((kvr,), ("mla_rank",), init="ones"),
+        "w_kr": spec((d, rope), ("embed", None)),
+        "w_uk": spec((kvr, h * nope), ("mla_rank", "heads_mlp")),
+        "w_uv": spec((kvr, h * vd), ("mla_rank", "heads_mlp")),
+        "w_o": spec((h * vd, d), ("heads_mlp", "embed")),
+    }
+
+
+def cross_attn_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wq": spec((d, h * dh), ("embed", "heads_mlp")),
+        "wk": spec((d, hkv * dh), ("embed", "heads_mlp")),
+        "wv": spec((d, hkv * dh), ("embed", "heads_mlp")),
+        "wo": spec((h * dh, d), ("heads_mlp", "embed")),
+        "gate_attn": spec((1,), (None,), init="zeros"),
+        "q_norm": spec((dh,), (None,), init="ones"),
+        "k_norm": spec((dh,), (None,), init="ones"),
+    }
+
+
+def layer_specs(desc: LayerDesc, cfg: ModelConfig) -> Dict[str, Any]:
+    s: Dict[str, Any] = {}
+    if desc.mixer == "attn":
+        s["ln_attn"] = _norm_specs(cfg.d_model, cfg)
+        s["attn"] = mla_specs(cfg) if cfg.use_mla else attn_specs(cfg)
+        if cfg.post_norm:
+            s["ln_attn_post"] = _norm_specs(cfg.d_model, cfg)
+    elif desc.mixer == "cross":
+        s["ln_attn"] = _norm_specs(cfg.d_model, cfg)
+        s["attn"] = cross_attn_specs(cfg)
+    elif desc.mixer == "mamba":
+        s["ln_attn"] = _norm_specs(cfg.d_model, cfg)
+        s["mamba"] = mamba_specs(cfg.d_model, cfg.ssm_heads, cfg.ssm_head_dim,
+                                 cfg.ssm_state, cfg.ssm_groups)
+    if desc.ffn == "mlp":
+        s["ln_mlp"] = _norm_specs(cfg.d_model, cfg)
+        d_ff = cfg.d_ff
+        s["mlp"] = (mlp_specs(cfg.d_model, d_ff) if cfg.norm == "layernorm"
+                    else gated_mlp_specs(cfg.d_model, d_ff))
+        if cfg.post_norm:
+            s["ln_mlp_post"] = _norm_specs(cfg.d_model, cfg)
+    elif desc.ffn == "moe":
+        s["ln_mlp"] = _norm_specs(cfg.d_model, cfg)
+        s["moe"] = moe_specs(cfg.d_model, cfg.moe_d_ff or cfg.d_ff,
+                             cfg.n_experts, cfg.n_shared_experts,
+                             expert_parallel=cfg.moe_expert_parallel)
+        s["router_bias"] = spec((cfg.n_experts,), (None,), dtype=jnp.float32,
+                                init="zeros")
+    return s
+
+
+# --------------------------------------------------------------- forward
+
+def _gqa_attention(p: Dict[str, Any], x: jax.Array, cfg: ModelConfig,
+                   desc: LayerDesc, q_offset: int) -> jax.Array:
+    B, T, _ = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, T, h, dh)
+    k = (x @ p["wk"]).reshape(B, T, hkv, dh)
+    v = (x @ p["wv"]).reshape(B, T, hkv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    pos = q_offset + jnp.arange(T)[None, :]
+    rd = int(cfg.rotary_pct * dh)
+    q = apply_rope(q, pos, cfg.rope_theta, rotary_dim=rd)
+    k = apply_rope(k, pos, cfg.rope_theta, rotary_dim=rd)
+    o = chunked_attention(q, k, v, causal=desc.causal, window=desc.window,
+                          attn_softcap=cfg.attn_softcap, kv_chunk=cfg.kv_chunk)
+    return o.reshape(B, T, h * dh) @ p["wo"]
+
+
+def _cross_attention(p: Dict[str, Any], x: jax.Array, vis: jax.Array,
+                     cfg: ModelConfig) -> jax.Array:
+    B, T, _ = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, T, h, dh)
+    k = (vis @ p["wk"]).reshape(B, vis.shape[1], hkv, dh)
+    v = (vis @ p["wv"]).reshape(B, vis.shape[1], hkv, dh)
+    q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    o = chunked_attention(q, k, v, causal=False, kv_chunk=cfg.kv_chunk)
+    return jnp.tanh(p["gate_attn"]) * (o.reshape(B, T, h * dh) @ p["wo"])
+
+
+def apply_layer(lp: Dict[str, Any], x: jax.Array, desc: LayerDesc,
+                cfg: ModelConfig, *, vis: Optional[jax.Array] = None,
+                q_offset: int = 0) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence (train/prefill) layer.  Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if desc.mixer == "attn":
+        h = _gqa_mixer(lp, x, cfg, desc, q_offset)
+        x = x + h
+    elif desc.mixer == "cross":
+        h = _apply_norm(lp["ln_attn"], x, cfg)
+        x = x + _cross_attention(lp["attn"], h, vis, cfg)
+    elif desc.mixer == "mamba":
+        h = _apply_norm(lp["ln_attn"], x, cfg)
+        x = x + mamba_block(lp["mamba"], h, n_heads=cfg.ssm_heads,
+                            head_dim=cfg.ssm_head_dim, d_state=cfg.ssm_state,
+                            n_groups=cfg.ssm_groups, chunk=cfg.ssm_chunk,
+                            norm_eps=cfg.norm_eps)
+    return _apply_ffn(lp, x, desc, cfg)
+
+
+def _gqa_mixer(lp, x, cfg, desc, q_offset):
+    h = _apply_norm(lp["ln_attn"], x, cfg)
+    if cfg.use_mla:
+        o, _ = mla_attention(
+            h, MLAWeights(**{k: lp["attn"][k] for k in MLAWeights._fields}),
+            n_heads=cfg.n_heads, nope=cfg.qk_nope_dim, rope_dim=cfg.qk_rope_dim,
+            v_dim=cfg.v_head_dim, rope_theta=cfg.rope_theta, q_offset=q_offset,
+            kv_chunk=cfg.kv_chunk, norm_eps=cfg.norm_eps)
+    else:
+        o = _gqa_attention(lp["attn"], h, cfg, desc, q_offset)
+    if cfg.post_norm:
+        o = _apply_norm(lp["ln_attn_post"], o, cfg)
+    return o
+
+
+# ------------------------------------------------------- prefill (w/ caches)
+
+def _qkv(p, x, cfg, rope_pos):
+    B, T, _ = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, T, h, dh)
+    k = (x @ p["wk"]).reshape(B, T, hkv, dh)
+    v = (x @ p["wv"]).reshape(B, T, hkv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    rd = int(cfg.rotary_pct * dh)
+    q = apply_rope(q, rope_pos, cfg.rope_theta, rotary_dim=rd)
+    k = apply_rope(k, rope_pos, cfg.rope_theta, rotary_dim=rd)
+    return q, k, v
+
+
+def _window_tail(k: jax.Array, window: int) -> jax.Array:
+    """Seed a ring cache from prefill: absolute position p lives at slot
+    p % window, matching decode's ``cache_len % window`` write index.  For
+    T < window, positions sit at their own index (pad right); otherwise the
+    last `window` tokens are rolled so slot alignment is preserved for any
+    T (not just multiples of the window)."""
+    T = k.shape[1]
+    if T < window:
+        pad = [(0, 0)] * k.ndim
+        pad[1] = (0, window - T)
+        return jnp.pad(k, pad)
+    tail = k[:, T - window:]
+    return jnp.roll(tail, T % window, axis=1)
+
+
+def apply_layer_prefill(lp: Dict[str, Any], x: jax.Array, desc: LayerDesc,
+                        cfg: ModelConfig, *, vis: Optional[jax.Array] = None
+                        ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Like apply_layer but also emits this layer's decode cache."""
+    cache: Dict[str, Any] = {}
+    if desc.mixer == "attn":
+        h = _apply_norm(lp["ln_attn"], x, cfg)
+        if cfg.use_mla:
+            o, lat = mla_attention(
+                h, MLAWeights(**{k: lp["attn"][k] for k in MLAWeights._fields}),
+                n_heads=cfg.n_heads, nope=cfg.qk_nope_dim,
+                rope_dim=cfg.qk_rope_dim, v_dim=cfg.v_head_dim,
+                rope_theta=cfg.rope_theta, kv_chunk=cfg.kv_chunk,
+                norm_eps=cfg.norm_eps)
+            cache = {"lat": lat}
+        else:
+            B, T, _ = x.shape
+            q, k, v = _qkv(lp["attn"], h, cfg, jnp.arange(T)[None, :])
+            o = chunked_attention(q, k, v, causal=desc.causal,
+                                  window=desc.window,
+                                  attn_softcap=cfg.attn_softcap,
+                                  kv_chunk=cfg.kv_chunk)
+            o = o.reshape(B, T, -1) @ lp["attn"]["wo"]
+            if desc.window > 0:
+                cache = {"k": _window_tail(k, desc.window),
+                         "v": _window_tail(v, desc.window)}
+            else:
+                cache = {"k": k, "v": v}
+        if cfg.post_norm:
+            o = _apply_norm(lp["ln_attn_post"], o, cfg)
+        x = x + o
+    elif desc.mixer == "cross":
+        h = _apply_norm(lp["ln_attn"], x, cfg)
+        p = lp["attn"]
+        B = x.shape[0]
+        hkv, dh = cfg.n_kv_heads, cfg.head_dim
+        kv_k = rms_norm((vis @ p["wk"]).reshape(B, -1, hkv, dh), p["k_norm"],
+                        cfg.norm_eps)
+        kv_v = (vis @ p["wv"]).reshape(B, -1, hkv, dh)
+        q = rms_norm((h @ p["wq"]).reshape(B, h.shape[1], cfg.n_heads, dh),
+                     p["q_norm"], cfg.norm_eps)
+        o = chunked_attention(q, kv_k, kv_v, causal=False, kv_chunk=cfg.kv_chunk)
+        x = x + jnp.tanh(p["gate_attn"]) * (o.reshape(B, h.shape[1], -1) @ p["wo"])
+        cache = {"k": kv_k, "v": kv_v}
+    elif desc.mixer == "mamba":
+        h = _apply_norm(lp["ln_attn"], x, cfg)
+        o, st = mamba_block(lp["mamba"], h, n_heads=cfg.ssm_heads,
+                            head_dim=cfg.ssm_head_dim, d_state=cfg.ssm_state,
+                            n_groups=cfg.ssm_groups, chunk=cfg.ssm_chunk,
+                            norm_eps=cfg.norm_eps, return_state=True)
+        x = x + o
+        cache = {"ssm": st.ssm, "cx": st.conv_x, "cb": st.conv_b, "cc": st.conv_c}
+    x, _ = _apply_ffn(lp, x, desc, cfg)
+    return x, cache
+
+
+def _apply_ffn(lp, x, desc, cfg):
+    aux = jnp.zeros((), jnp.float32)
+    if desc.ffn == "mlp":
+        h = _apply_norm(lp["ln_mlp"], x, cfg)
+        h = (mlp(lp["mlp"], h, "gelu") if cfg.norm == "layernorm"
+             else gated_mlp(lp["mlp"], h, cfg.act))
+        if cfg.post_norm:
+            h = _apply_norm(lp["ln_mlp_post"], h, cfg)
+        x = x + h
+    elif desc.ffn == "moe":
+        h = _apply_norm(lp["ln_mlp"], x, cfg)
+        h, aux = moe_ffn(lp["moe"], h, top_k=cfg.top_k,
+                         capacity_factor=cfg.capacity_factor, act=cfg.act,
+                         router_bias=lp.get("router_bias"),
+                         groups=cfg.moe_groups,
+                         expert_parallel=cfg.moe_expert_parallel)
+        x = x + h
+    return x, aux
+
+
+# ---------------------------------------------------------------- decode
+
+def cache_specs(desc: LayerDesc, cfg: ModelConfig, batch: int, seq: int
+                ) -> Dict[str, Any]:
+    """ParamSpec-style declaration of one layer's decode cache (so the dry-run
+    can build ShapeDtypeStructs and shardings for serve_step inputs)."""
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    dt = jnp.bfloat16
+    if desc.mixer == "attn":
+        if cfg.use_mla:
+            return {"lat": spec((batch, seq, cfg.kv_lora_rank + cfg.qk_rope_dim),
+                                ("batch", "kv_seq", None), dtype=dt)}
+        s = min(seq, desc.window) if desc.window > 0 else seq
+        return {"k": spec((batch, s, hkv, dh), ("batch", "kv_seq", "kv_heads", None), dtype=dt),
+                "v": spec((batch, s, hkv, dh), ("batch", "kv_seq", "kv_heads", None), dtype=dt)}
+    if desc.mixer == "cross":
+        return {"k": spec((batch, cfg.vision_seq, hkv, dh), ("batch", None, "kv_heads", None), dtype=dt),
+                "v": spec((batch, cfg.vision_seq, hkv, dh), ("batch", None, "kv_heads", None), dtype=dt)}
+    if desc.mixer == "mamba":
+        H, P, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+        W = 4
+        return {"ssm": spec((batch, H, N, P), ("batch", "kv_heads", None, None), dtype=jnp.float32),
+                "cx": spec((batch, W - 1, H * P), ("batch", None, "heads_mlp"), dtype=dt),
+                "cb": spec((batch, W - 1, G * N), ("batch", None, None), dtype=dt),
+                "cc": spec((batch, W - 1, G * N), ("batch", None, None), dtype=dt)}
+    return {}
+
+
+def apply_layer_decode(lp: Dict[str, Any], x: jax.Array, desc: LayerDesc,
+                       cfg: ModelConfig, cache: Dict[str, Any],
+                       cache_len: jax.Array
+                       ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Single-token decode.  x: (B, 1, D); cache_len: () int32 = #tokens so far."""
+    B = x.shape[0]
+    if desc.mixer == "attn":
+        h = _apply_norm(lp["ln_attn"], x, cfg)
+        if cfg.use_mla:
+            o, lat = mla_decode(
+                h, MLAWeights(**{k: lp["attn"][k] for k in MLAWeights._fields}),
+                cache["lat"], cache_len=cache_len, n_heads=cfg.n_heads,
+                nope=cfg.qk_nope_dim, rope_dim=cfg.qk_rope_dim,
+                v_dim=cfg.v_head_dim, rope_theta=cfg.rope_theta,
+                norm_eps=cfg.norm_eps)
+            cache = {"lat": lat}
+        else:
+            q, k, v = _qkv(lp["attn"], h, cfg,
+                           jnp.reshape(cache_len, (1, 1)))
+            S = cache["k"].shape[1]
+            idx = cache_len % S if desc.window > 0 else cache_len
+            kc = jax.lax.dynamic_update_slice(cache["k"], k, (0, idx, 0, 0))
+            vc = jax.lax.dynamic_update_slice(cache["v"], v, (0, idx, 0, 0))
+            n_valid = jnp.minimum(cache_len + 1, S)
+            o = decode_attention(q, kc, vc, cache_len=n_valid,
+                                 attn_softcap=cfg.attn_softcap)
+            o = o.reshape(B, 1, -1) @ lp["attn"]["wo"]
+            cache = {"k": kc, "v": vc}
+        if cfg.post_norm:
+            o = _apply_norm(lp["ln_attn_post"], o, cfg)
+        x = x + o
+    elif desc.mixer == "cross":
+        h = _apply_norm(lp["ln_attn"], x, cfg)
+        p = lp["attn"]
+        q = rms_norm((h @ p["wq"]).reshape(B, 1, cfg.n_heads, cfg.head_dim),
+                     p["q_norm"], cfg.norm_eps)
+        o = decode_attention(q, cache["k"], cache["v"],
+                             cache_len=jnp.asarray(cache["k"].shape[1]))
+        x = x + jnp.tanh(p["gate_attn"]) * (o.reshape(B, 1, -1) @ p["wo"])
+    elif desc.mixer == "mamba":
+        h = _apply_norm(lp["ln_attn"], x, cfg)
+        st = MambaState(cache["ssm"], cache["cx"], cache["cb"], cache["cc"])
+        o, st = mamba_decode(lp["mamba"], h, st, n_heads=cfg.ssm_heads,
+                             head_dim=cfg.ssm_head_dim, d_state=cfg.ssm_state,
+                             n_groups=cfg.ssm_groups, norm_eps=cfg.norm_eps)
+        x = x + o
+        cache = {"ssm": st.ssm, "cx": st.conv_x, "cb": st.conv_b, "cc": st.conv_c}
+    x, _ = _apply_ffn(lp, x, desc, cfg)
+    return x, cache

@@ -1,0 +1,146 @@
+"""Model substrate: parameter specs with logical sharding axes, norms, rope.
+
+Parameters are declared as :class:`ParamSpec` pytrees carrying **logical axis
+names** per dimension ("embed", "heads", "mlp", "experts", ...).  The dist
+layer maps logical axes → mesh axes with divisibility-aware rules
+(MaxText-style), which is what lets one model definition serve every mesh in
+the dry-run.  Specs can be materialized (real arrays, for CPU smoke tests and
+examples) or abstracted (ShapeDtypeStruct, for lowering at scale without
+allocation).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}
+
+
+@jax.tree_util.register_static
+@dataclass(frozen=True)
+class ParamSpec:
+    """Declaration of one parameter tensor."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]          # logical axis name per dim
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"                     # normal | zeros | ones
+    scale: Optional[float] = None            # stddev; default fan-in
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+    def stacked(self, n: int, axis_name: str = "layers") -> "ParamSpec":
+        return replace(self, shape=(n, *self.shape), axes=(axis_name, *self.axes))
+
+
+def spec(shape: Tuple[int, ...], axes: Tuple[Optional[str], ...], *,
+         dtype=jnp.bfloat16, init: str = "normal", scale: Optional[float] = None
+         ) -> ParamSpec:
+    return ParamSpec(tuple(shape), tuple(axes), dtype, init, scale)
+
+
+# ----------------------------------------------------------------- pytree ops
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn: Callable[[ParamSpec], Any], tree: Any) -> Any:
+    return jax.tree.map(fn, tree, is_leaf=is_spec)
+
+
+def stack_specs(tree: Any, n: int) -> Any:
+    """Prepend a scanned 'layers' dimension to every spec in the tree."""
+    return tree_map_specs(lambda s: s.stacked(n), tree)
+
+
+def abstract_params(tree: Any) -> Any:
+    return tree_map_specs(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), tree)
+
+
+def materialize(tree: Any, key: jax.Array) -> Any:
+    """Materialize real parameters (smoke tests / examples, CPU scale)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = []
+    for s, k in zip(leaves, keys):
+        if s.init == "zeros":
+            out.append(jnp.zeros(s.shape, s.dtype))
+        elif s.init == "ones":
+            out.append(jnp.ones(s.shape, s.dtype))
+        else:
+            fan_in = s.shape[-2] if len(s.shape) >= 2 else max(s.shape[-1], 1)
+            std = s.scale if s.scale is not None else 1.0 / math.sqrt(fan_in)
+            out.append((jax.random.normal(k, s.shape, jnp.float32) * std).astype(s.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def count_params(tree: Any) -> int:
+    return sum(int(np.prod(s.shape)) for s in jax.tree.leaves(tree, is_leaf=is_spec)
+               if isinstance(s, ParamSpec))
+
+
+# -------------------------------------------------------------------- layers
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6,
+             plus_one: bool = False) -> jax.Array:
+    """RMSNorm in fp32 accumulation (gemma-style optional (1+g) scaling)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    g = gamma.astype(jnp.float32)
+    y = y * (1.0 + g) if plus_one else y * g
+    return y.astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 1e4,
+               rotary_dim: Optional[int] = None) -> jax.Array:
+    """Rotary embedding on the last dim; supports partial rotary (stablelm).
+
+    x: (..., T, H, D) or (..., T, D); positions: broadcastable to (..., T).
+    """
+    d = x.shape[-1]
+    rd = rotary_dim or d
+    xr, xp = x[..., :rd], x[..., rd:]
+    freqs = rope_freqs(rd, theta)                             # (rd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs    # (..., T, rd/2)
+    while ang.ndim < x.ndim:                                  # add head dim
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = xr[..., 0::2].astype(jnp.float32), xr[..., 1::2].astype(jnp.float32)
+    o1, o2 = x1 * cos - x2 * sin, x2 * cos + x1 * sin
+    rot = jnp.stack([o1, o2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    return jnp.concatenate([rot, xp], axis=-1) if rd < d else rot
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap <= 0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+ACTIVATIONS: Dict[str, Callable[[jax.Array], jax.Array]] = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}

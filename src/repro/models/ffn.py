@@ -1,0 +1,37 @@
+"""Feed-forward blocks: gated (SwiGLU/GeGLU) and plain MLPs."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .common import ACTIVATIONS, ParamSpec, spec
+
+
+def gated_mlp_specs(d_model: int, d_ff: int, dtype=jnp.bfloat16) -> Dict[str, ParamSpec]:
+    return {
+        "w_gate": spec((d_model, d_ff), ("embed", "mlp"), dtype=dtype),
+        "w_up": spec((d_model, d_ff), ("embed", "mlp"), dtype=dtype),
+        "w_down": spec((d_ff, d_model), ("mlp", "embed"), dtype=dtype),
+    }
+
+
+def gated_mlp(p: Dict[str, jax.Array], x: jax.Array, act: str = "silu") -> jax.Array:
+    a = ACTIVATIONS[act]
+    h = a(x @ p["w_gate"]) * (x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+def mlp_specs(d_model: int, d_ff: int, dtype=jnp.bfloat16) -> Dict[str, ParamSpec]:
+    return {
+        "w_in": spec((d_model, d_ff), ("embed", "mlp"), dtype=dtype),
+        "b_in": spec((d_ff,), ("mlp",), dtype=dtype, init="zeros"),
+        "w_out": spec((d_ff, d_model), ("mlp", "embed"), dtype=dtype),
+        "b_out": spec((d_model,), ("embed",), dtype=dtype, init="zeros"),
+    }
+
+
+def mlp(p: Dict[str, jax.Array], x: jax.Array, act: str = "gelu") -> jax.Array:
+    a = ACTIVATIONS[act]
+    return a(x @ p["w_in"] + p["b_in"]) @ p["w_out"] + p["b_out"]

@@ -1,0 +1,185 @@
+"""Mamba2 — State Space Duality (SSD) block, chunked parallel form + O(1)
+recurrent decode (arXiv:2405.21060), adapted for TPU/GSPMD.
+
+Discretization: h_t = exp(dt_t·A) h_{t-1} + dt_t B_t x_t ;  y_t = C_t h_t + D x_t
+with scalar A per head (A = -exp(a_log) < 0).
+
+The chunked dual form splits T into chunks of length Q and runs a scan over
+chunks: within a chunk the contribution is an attention-like (Q, Q) contraction
+with a causal decay mask (this is the part that maps onto the MXU); across
+chunks a small (H, N, P) state is carried.  Memory stays O(B·Q²·H) per step of
+the scan rather than O(B·T²).
+
+Decode is the exact recurrence on a (B, H, N, P) state plus a width-4 causal
+conv tail — no KV cache, which is why `long_500k` is assigned to SSM/hybrid
+archs.  Sharding: heads on the model axis, batch on data; B/C projections are
+per-group (G small) and replicated.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamSpec, rms_norm, spec
+
+
+def mamba_specs(d_model: int, n_heads: int, head_dim: int, d_state: int,
+                n_groups: int = 1, conv_width: int = 4, dtype=jnp.bfloat16
+                ) -> Dict[str, Any]:
+    d_inner = n_heads * head_dim
+    gn = n_groups * d_state
+    return {
+        "w_z": spec((d_model, d_inner), ("embed", "heads_mlp"), dtype=dtype),
+        "w_x": spec((d_model, d_inner), ("embed", "heads_mlp"), dtype=dtype),
+        "w_b": spec((d_model, gn), ("embed", None), dtype=dtype),
+        "w_c": spec((d_model, gn), ("embed", None), dtype=dtype),
+        "w_dt": spec((d_model, n_heads), ("embed", None), dtype=dtype),
+        "conv_x": spec((conv_width, d_inner), (None, "heads_mlp"), dtype=dtype,
+                       init="normal", scale=0.5),
+        "conv_b": spec((conv_width, gn), (None, None), dtype=dtype, scale=0.5),
+        "conv_c": spec((conv_width, gn), (None, None), dtype=dtype, scale=0.5),
+        "a_log": spec((n_heads,), (None,), dtype=jnp.float32, init="zeros"),
+        "dt_bias": spec((n_heads,), (None,), dtype=jnp.float32, init="zeros"),
+        "d_skip": spec((n_heads,), (None,), dtype=jnp.float32, init="ones"),
+        "norm": spec((d_inner,), ("heads_mlp",), dtype=dtype, init="ones"),
+        "w_out": spec((d_inner, d_model), ("heads_mlp", "embed"), dtype=dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, tail: jax.Array = None) -> jax.Array:
+    """Depthwise causal conv: x (B, T, C), w (W, C).  `tail` (B, W-1, C)
+    prepends decode/prefill-continuation context."""
+    W = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(W))
+    return jax.nn.silu(y)
+
+
+class MambaState(NamedTuple):
+    ssm: jax.Array        # (B, H, N, P) recurrent state
+    conv_x: jax.Array     # (B, W-1, d_inner) conv tails
+    conv_b: jax.Array     # (B, W-1, G*N)
+    conv_c: jax.Array     # (B, W-1, G*N)
+
+
+def init_state(batch: int, n_heads: int, head_dim: int, d_state: int,
+               n_groups: int, conv_width: int = 4, dtype=jnp.float32) -> MambaState:
+    return MambaState(
+        ssm=jnp.zeros((batch, n_heads, d_state, head_dim), dtype),
+        conv_x=jnp.zeros((batch, conv_width - 1, n_heads * head_dim), dtype),
+        conv_b=jnp.zeros((batch, conv_width - 1, n_groups * d_state), dtype),
+        conv_c=jnp.zeros((batch, conv_width - 1, n_groups * d_state), dtype),
+    )
+
+
+def mamba_block(p: Dict[str, Any], x: jax.Array, *, n_heads: int,
+                head_dim: int, d_state: int, n_groups: int = 1,
+                chunk: int = 256, norm_eps: float = 1e-6,
+                return_state: bool = False):
+    """Chunked SSD forward for train/prefill.  x: (B, T, D).
+    With ``return_state`` also returns the MambaState for decode handoff."""
+    B, T, D = x.shape
+    H, P, N, G = n_heads, head_dim, d_state, n_groups
+
+    z = x @ p["w_z"]                                            # (B,T,HP)
+    xt, bt, ct = x @ p["w_x"], x @ p["w_b"], x @ p["w_c"]
+    xs = _causal_conv(xt, p["conv_x"])
+    bs = _causal_conv(bt, p["conv_b"])
+    cs = _causal_conv(ct, p["conv_c"])
+    dt = jax.nn.softplus((x @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
+
+    Q = min(chunk, T)
+    T_orig = T
+    if T % Q:                     # right-pad to a chunk multiple; sliced off.
+        # padded steps carry dt=0 -> log-decay 0 (state unchanged) and zero
+        # additive term, so even the returned state stays exact.
+        pad = Q - T % Q
+        xs, bs, cs = (jnp.pad(v, ((0, 0), (0, pad), (0, 0))) for v in (xs, bs, cs))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        T = T + pad
+    nc = T // Q
+    xc = xs.reshape(B, nc, Q, H, P).astype(jnp.float32)
+    bc = bs.reshape(B, nc, Q, G, N).astype(jnp.float32)
+    cc = cs.reshape(B, nc, Q, G, N).astype(jnp.float32)
+    dtc = dt.reshape(B, nc, Q, H)
+    a = -jnp.exp(p["a_log"])                                    # (H,)
+    la = dtc * a                                                # log-decay <=0
+    rep = H // G
+
+    def step(h, xs_):
+        xk, bk, ck, lak, dtk = xs_                              # per-chunk slabs
+        lcum = jnp.cumsum(lak, axis=1)                          # (B,Q,H)
+        # intra-chunk: decay(t,s) = exp(lcum_t - lcum_s), s <= t
+        diff = lcum[:, :, None, :] - lcum[:, None, :, :]        # (B,Qt,Qs,H)
+        causal = jnp.tril(jnp.ones((Q, Q), bool))
+        decay = jnp.where(causal[None, :, :, None], jnp.exp(diff), 0.0)
+        cb = jnp.einsum("bqgn,bsgn->bqsg", ck, bk)              # (B,Qt,Qs,G)
+        cb = jnp.repeat(cb, rep, axis=3)                        # (B,Qt,Qs,H)
+        y_intra = jnp.einsum("bqsh,bsh,bshp->bqhp", cb * decay, dtk, xk)
+        # inter-chunk: y += C_t exp(lcum_t) h_prev
+        ch = jnp.repeat(ck, rep, axis=2).reshape(B, Q, H, N)
+        y_inter = jnp.einsum("bqhn,bhnp->bqhp", ch, h) * jnp.exp(lcum)[..., None]
+        # state update: h = exp(lcum_Q) h + Σ_s exp(lcum_Q - lcum_s) dt_s B_s x_s
+        tail = jnp.exp(lcum[:, -1:, :] - lcum)                  # (B,Q,H)
+        bh = jnp.repeat(bk, rep, axis=2).reshape(B, Q, H, N)
+        h_new = h * jnp.exp(lcum[:, -1, :])[:, :, None, None] + jnp.einsum(
+            "bqhn,bqh,bqhp->bhnp", bh, tail * dtk, xk)
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    to_scan = (xc.transpose(1, 0, 2, 3, 4), bc.transpose(1, 0, 2, 3, 4),
+               cc.transpose(1, 0, 2, 3, 4), la.transpose(1, 0, 2, 3),
+               dtc.transpose(1, 0, 2, 3))
+    h_fin, ys = jax.lax.scan(step, h0, to_scan)                 # (nc,B,Q,H,P)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, T, H, P)
+    y = y + p["d_skip"][None, None, :, None] * xc.reshape(B, T, H, P)
+    y = y[:, :T_orig].reshape(B, T_orig, H * P).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["norm"], norm_eps)
+    out = y @ p["w_out"]
+    if not return_state:
+        return out
+    W = p["conv_x"].shape[0]
+    state = MambaState(ssm=h_fin, conv_x=xt[:, T_orig - (W - 1):, :],
+                       conv_b=bt[:, T_orig - (W - 1):, :],
+                       conv_c=ct[:, T_orig - (W - 1):, :])
+    return out, state
+
+
+def mamba_decode(p: Dict[str, Any], x: jax.Array, state: MambaState, *,
+                 n_heads: int, head_dim: int, d_state: int, n_groups: int = 1,
+                 norm_eps: float = 1e-6) -> Tuple[jax.Array, MambaState]:
+    """Exact single-token recurrence.  x: (B, 1, D)."""
+    B, _, D = x.shape
+    H, P, N, G = n_heads, head_dim, d_state, n_groups
+    rep = H // G
+
+    z = x @ p["w_z"]
+    xt, bt, ct = x @ p["w_x"], x @ p["w_b"], x @ p["w_c"]
+    # conv with cached tails
+    def conv1(v, w, tail):
+        buf = jnp.concatenate([tail, v], axis=1)                # (B, W, C)
+        y = jnp.einsum("bwc,wc->bc", buf, w)[:, None, :]
+        return jax.nn.silu(y), buf[:, 1:, :]
+    xs, tx = conv1(xt, p["conv_x"], state.conv_x)
+    bs, tb = conv1(bt, p["conv_b"], state.conv_b)
+    cs, tc = conv1(ct, p["conv_c"], state.conv_c)
+
+    dt = jax.nn.softplus((x @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])[:, 0]
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt * a)                                     # (B,H)
+    xh = xs.reshape(B, H, P).astype(jnp.float32)
+    bh = jnp.repeat(bs.reshape(B, G, N), rep, axis=1)           # (B,H,N)
+    chd = jnp.repeat(cs.reshape(B, G, N), rep, axis=1)
+    h = state.ssm * decay[..., None, None] + jnp.einsum(
+        "bhn,bh,bhp->bhnp", bh, dt, xh)
+    y = jnp.einsum("bhn,bhnp->bhp", chd, h) + p["d_skip"][None, :, None] * xh
+    y = y.reshape(B, 1, H * P).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["norm"], norm_eps)
+    return y @ p["w_out"], MambaState(h, tx, tb, tc)

@@ -1,0 +1,321 @@
+"""Model: embeds + scanned block groups + head, with train / prefill / decode
+entry points shared by the trainer, the server, and the multi-pod dry-run.
+
+Entry points (all pure functions over pytrees — pjit-ready):
+
+* ``loss_fn(params, batch)``      — token CE (+ MoE aux), for train_step
+* ``prefill(params, batch)``      — full-sequence logits + decode caches
+* ``decode_step(params, caches, token, cache_len [, extras])``
+
+Input contract per family (``input_specs`` builds the ShapeDtypeStructs):
+LM: tokens/labels (B, T) int32.  VLM: + vision_embeds (B, Nv, Dv) — the
+modality frontend is a stub per the assignment (precomputed patch embeddings).
+Audio: frames (B, T, F) + frame labels (encoder-only).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .blocks import (BlockGroup, LayerDesc, apply_layer, apply_layer_decode,
+                     apply_layer_prefill, block_groups, cache_specs,
+                     layer_specs)
+from .common import abstract_params as _abstract  # noqa: F401 (re-export)
+from .common import (abstract_params, count_params, materialize, softcap,
+                     spec, stack_specs, tree_map_specs)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.groups: List[BlockGroup] = block_groups(cfg)
+        assert sum(g.count * len(g.descs) for g in self.groups) == cfg.n_layers
+
+    # ------------------------------------------------------------ params
+
+    def param_specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        specs: Dict[str, Any] = {}
+        if cfg.family == "audio":
+            specs["frontend"] = {
+                "w": spec((cfg.frontend_dim, cfg.d_model), (None, "embed")),
+                "b": spec((cfg.d_model,), ("embed",), init="zeros"),
+            }
+        else:
+            specs["embed"] = spec((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                                  scale=cfg.d_model ** -0.5)
+        if cfg.family == "vlm":
+            specs["vision_proj"] = spec((cfg.vision_dim, cfg.d_model),
+                                        (None, "embed"))
+        for gi, g in enumerate(self.groups):
+            block = {f"l{i}": layer_specs(d, cfg) for i, d in enumerate(g.descs)}
+            specs[f"blocks{gi}"] = stack_specs(block, g.count)
+        specs["ln_f"] = ({"g": spec((cfg.d_model,), ("embed",), init="ones"),
+                          "b": spec((cfg.d_model,), ("embed",), init="zeros")}
+                         if cfg.norm == "layernorm" else
+                         {"g": spec((cfg.d_model,), ("embed",),
+                                    init="zeros" if cfg.rms_plus_one else "ones")})
+        if not cfg.tie_embeddings:
+            specs["head"] = spec((cfg.d_model, cfg.vocab), ("embed", "vocab"))
+        return specs
+
+    def init_params(self, key: jax.Array) -> Any:
+        return materialize(self.param_specs(), key)
+
+    def abstract_params(self) -> Any:
+        return abstract_params(self.param_specs())
+
+    def n_params(self) -> int:
+        return count_params(self.param_specs())
+
+    def n_active_params(self) -> int:
+        """Parameters touched per token (MoE: top_k of routed experts)."""
+        cfg = self.cfg
+        total = 0
+        for leaf_path, s in _iter_with_path(self.param_specs()):
+            n = 1
+            for d in s.shape:
+                n *= d
+            if "moe" in leaf_path and any(k in leaf_path for k in
+                                          ("w_gate", "w_up", "w_down")):
+                n = n * cfg.top_k // max(cfg.n_experts, 1)
+            total += n
+        return total
+
+    # ------------------------------------------------------------ forward
+
+    def _embed(self, params, batch):
+        cfg = self.cfg
+        if cfg.family == "audio":
+            x = batch["frames"].astype(params["frontend"]["w"].dtype)
+            x = x @ params["frontend"]["w"] + params["frontend"]["b"]
+        else:
+            x = jnp.take(params["embed"], batch["tokens"], axis=0)
+            if cfg.rms_plus_one:                      # gemma-style embed scale
+                x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        return x
+
+    def _head(self, params, x):
+        from ..dist.sharding import logical_constraint
+        cfg = self.cfg
+        if cfg.norm == "layernorm":
+            from .common import layer_norm
+            x = layer_norm(x, params["ln_f"]["g"], params["ln_f"]["b"], cfg.norm_eps)
+        else:
+            from .common import rms_norm
+            x = rms_norm(x, params["ln_f"]["g"], cfg.norm_eps,
+                         plus_one=cfg.rms_plus_one)
+        w = params["embed"].T if cfg.tie_embeddings else params["head"]
+        # anchor: vocab sharded on model; without this, tied-embedding heads
+        # make GSPMD replicate (B, T, V) per device (~60 GiB at 128k vocab)
+        logits = logical_constraint(x @ w, "dp", None, "model")
+        return softcap(logits, cfg.logit_softcap)
+
+    def forward(self, params, batch, *, remat: bool = False
+                ) -> Tuple[jax.Array, jax.Array]:
+        """Full-sequence logits.  Returns (logits, aux_loss)."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        vis = None
+        if cfg.family == "vlm":
+            vis = batch["vision_embeds"].astype(x.dtype) @ params["vision_proj"]
+        aux_total = jnp.zeros((), jnp.float32)
+
+        from ..dist.sharding import logical_constraint
+        x = logical_constraint(x, "dp", None, None)
+        for gi, g in enumerate(self.groups):
+            def body(carry, lp, g=g):
+                x, aux = carry
+                for i, desc in enumerate(g.descs):
+                    x, a = apply_layer(lp[f"l{i}"], x, desc, cfg, vis=vis)
+                    aux = aux + a
+                x = logical_constraint(x, "dp", None, None)
+                return (x, aux), None
+            if remat:
+                body = jax.checkpoint(body)
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total),
+                                             params[f"blocks{gi}"])
+        return self._head(params, x), aux_total
+
+    def loss_fn(self, params, batch, *, remat: bool = False) -> jax.Array:
+        logits, aux = self.forward(params, batch, remat=remat)
+        labels = batch["labels"]
+        # one-hot contraction instead of take_along_axis: a gather over the
+        # vocab-sharded logits would force GSPMD to all-gather (B,T,V) — the
+        # one-hot multiply keeps the vocab dim sharded and fuses.
+        logits32 = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits32, axis=-1)
+        onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+        gold = jnp.sum(logits32 * onehot, axis=-1)
+        ce = (lse - gold).mean()
+        return ce + 0.01 * aux
+
+    # ------------------------------------------------------------ serving
+
+    def prefill(self, params, batch) -> Tuple[jax.Array, List[Any]]:
+        """Returns (last-position logits, caches: one stacked pytree/group)."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        vis = None
+        if cfg.family == "vlm":
+            vis = batch["vision_embeds"].astype(x.dtype) @ params["vision_proj"]
+        caches: List[Any] = []
+        for gi, g in enumerate(self.groups):
+            def body(x, lp, g=g):
+                cs = {}
+                for i, desc in enumerate(g.descs):
+                    x, c = apply_layer_prefill(lp[f"l{i}"], x, desc, cfg, vis=vis)
+                    cs[f"l{i}"] = c
+                return x, cs
+            x, cs = jax.lax.scan(body, x, params[f"blocks{gi}"])
+            caches.append(cs)
+        logits = self._head(params, x[:, -1:, :])
+        return logits, caches
+
+    def decode_step(self, params, caches, token, cache_len,
+                    extras: Optional[Dict[str, jax.Array]] = None
+                    ) -> Tuple[jax.Array, List[Any]]:
+        """One decode step.  token: (B, 1) int32; cache_len: () int32."""
+        cfg = self.cfg
+        x = self._embed(params, {"tokens": token})
+        new_caches: List[Any] = []
+        for gi, g in enumerate(self.groups):
+            def body(x, xs, g=g):
+                lp, cache = xs
+                ncs = {}
+                for i, desc in enumerate(g.descs):
+                    x, nc = apply_layer_decode(lp[f"l{i}"], x, desc, cfg,
+                                               cache[f"l{i}"], cache_len)
+                    ncs[f"l{i}"] = nc
+                return x, ncs
+            x, ncs = jax.lax.scan(body, x, (params[f"blocks{gi}"], caches[gi]))
+            new_caches.append(ncs)
+        return self._head(params, x), new_caches
+
+    # -------------------------------------------------------------- specs
+
+    def cache_param_specs(self, batch: int, seq: int) -> List[Any]:
+        """ParamSpec pytree of decode caches (stacked per group)."""
+        out = []
+        for g in self.groups:
+            block = {f"l{i}": cache_specs(d, self.cfg, batch, seq)
+                     for i, d in enumerate(g.descs)}
+            out.append(stack_specs(block, g.count))
+        return out
+
+    def input_specs(self, seq_len: int, global_batch: int, kind: str
+                    ) -> Dict[str, Any]:
+        """ShapeDtypeStructs for the chosen entry point (no allocation)."""
+        cfg = self.cfg
+        B, T = global_batch, seq_len
+        ii = jnp.int32
+        if kind == "train":
+            if cfg.family == "audio":
+                batch = {"frames": jax.ShapeDtypeStruct((B, T, cfg.frontend_dim), jnp.bfloat16),
+                         "labels": jax.ShapeDtypeStruct((B, T), ii)}
+            else:
+                batch = {"tokens": jax.ShapeDtypeStruct((B, T), ii),
+                         "labels": jax.ShapeDtypeStruct((B, T), ii)}
+            if cfg.family == "vlm":
+                batch["vision_embeds"] = jax.ShapeDtypeStruct(
+                    (B, cfg.vision_seq, cfg.vision_dim), jnp.bfloat16)
+            return batch
+        if kind == "prefill":
+            if cfg.family == "audio":
+                return {"frames": jax.ShapeDtypeStruct((B, T, cfg.frontend_dim), jnp.bfloat16)}
+            batch = {"tokens": jax.ShapeDtypeStruct((B, T), ii)}
+            if cfg.family == "vlm":
+                batch["vision_embeds"] = jax.ShapeDtypeStruct(
+                    (B, cfg.vision_seq, cfg.vision_dim), jnp.bfloat16)
+            return batch
+        if kind == "decode":
+            caches = [abstract_params(c) for c in self.cache_param_specs(B, T)]
+            return {"token": jax.ShapeDtypeStruct((B, 1), ii),
+                    "cache_len": jax.ShapeDtypeStruct((), ii),
+                    "caches": caches}
+        raise ValueError(kind)
+
+
+    # ----------------------------------------------- roofline block programs
+
+    def block_fns(self, kind: str, seq_len: int, global_batch: int,
+                  *, remat: bool = True) -> List[Dict[str, Any]]:
+        """One entry per scan group: {fn, abstract, count, name}.  The dry-run
+        lowers each block under the same shardings as the full graph and the
+        roofline composes total = full + (count-1) x block (DESIGN.md §5)."""
+        cfg = self.cfg
+        B, T = global_batch, seq_len
+        x_t = jax.ShapeDtypeStruct((B, T, cfg.d_model), jnp.bfloat16)
+        x_1 = jax.ShapeDtypeStruct((B, 1, cfg.d_model), jnp.bfloat16)
+        vis_t = (jax.ShapeDtypeStruct((B, cfg.vision_seq, cfg.d_model), jnp.bfloat16)
+                 if cfg.family == "vlm" else None)
+        out: List[Dict[str, Any]] = []
+        for gi, g in enumerate(self.groups):
+            block_spec = {f"l{i}": layer_specs(d, cfg)
+                          for i, d in enumerate(g.descs)}
+            abstract_bp = abstract_params(block_spec)
+
+            if kind == "train":
+                def fn(bp, x, vis=None, g=g):
+                    def inner(args):
+                        bp, x = args
+                        aux = jnp.zeros((), jnp.float32)
+                        for i, desc in enumerate(g.descs):
+                            x, a = apply_layer(bp[f"l{i}"], x, desc, cfg, vis=vis)
+                            aux = aux + a
+                        return jnp.mean(x.astype(jnp.float32) ** 2) + 0.01 * aux
+                    f = jax.checkpoint(inner) if remat else inner
+                    return jax.value_and_grad(f)((bp, x))
+                abstract: Dict[str, Any] = {"bp": abstract_bp, "x": x_t}
+                if vis_t is not None:
+                    abstract["vis"] = vis_t
+            elif kind == "prefill":
+                def fn(bp, x, vis=None, g=g):
+                    cs = {}
+                    for i, desc in enumerate(g.descs):
+                        x, c = apply_layer_prefill(bp[f"l{i}"], x, desc, cfg,
+                                                   vis=vis)
+                        cs[f"l{i}"] = c
+                    return x, cs
+                abstract = {"bp": abstract_bp, "x": x_t}
+                if vis_t is not None:
+                    abstract["vis"] = vis_t
+            elif kind == "decode":
+                cache_spec = {f"l{i}": cache_specs(d, cfg, B, T)
+                              for i, d in enumerate(g.descs)}
+                def fn(bp, cache, x, cache_len, g=g):
+                    ncs = {}
+                    for i, desc in enumerate(g.descs):
+                        x, nc = apply_layer_decode(bp[f"l{i}"], x, desc, cfg,
+                                                   cache[f"l{i}"], cache_len)
+                        ncs[f"l{i}"] = nc
+                    return x, ncs
+                abstract = {"bp": abstract_bp,
+                            "cache": abstract_params(cache_spec),
+                            "x": x_1,
+                            "cache_len": jax.ShapeDtypeStruct((), jnp.int32)}
+                abstract["cache_spec"] = cache_spec
+            else:
+                raise ValueError(kind)
+            out.append({"fn": fn, "abstract": abstract, "count": g.count,
+                        "name": f"group{gi}", "block_spec": block_spec})
+        return out
+
+
+def _iter_with_path(tree, prefix=""):
+    from .common import is_spec
+    if is_spec(tree):
+        yield prefix, tree
+        return
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _iter_with_path(v, prefix + "/" + str(k))
+
+
+@functools.lru_cache(maxsize=64)
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

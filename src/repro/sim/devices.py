@@ -1,0 +1,119 @@
+"""Device population & check-in process (Fig. 2, Fig. 8a).
+
+The paper's traces (FedScale availability; AI-Benchmark capacities) are not
+redistributable, so we generate synthetic populations calibrated to the same
+qualitative structure:
+
+* **diurnal availability** — non-homogeneous Poisson check-ins with a 24-h
+  sinusoidal rate (Fig. 2a);
+* **heterogeneous capacity** — log-normal CPU/memory marginals with positive
+  correlation (Fig. 2b), stratified by thresholds into the paper's four
+  regions: General ⊇ {Compute-Rich, Memory-Rich} ⊇ High-Performance, i.e.
+  nested *and* overlapping eligible sets (Fig. 8a);
+* **speed** correlated with capacity; response times log-normal (Wang 2023),
+  slow devices more likely to fail (§4.3).
+
+Each device executes at most one task per check-in (the paper limits one job
+per device-day) and then leaves the pool.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Iterator, List, Tuple
+
+import numpy as np
+
+from ..core.types import Device, Requirement
+
+DAY = 24 * 3600.0
+
+# The four requirement classes of Figure 8a.
+REQ_GENERAL = Requirement.of("general", cpu=1.0, mem=1.0)
+REQ_COMPUTE = Requirement.of("compute_rich", cpu=6.0, mem=1.0)
+REQ_MEMORY = Requirement.of("memory_rich", cpu=1.0, mem=6.0)
+REQ_HIGHPERF = Requirement.of("high_performance", cpu=6.0, mem=6.0)
+REQUIREMENT_CLASSES: Tuple[Requirement, ...] = (
+    REQ_GENERAL, REQ_COMPUTE, REQ_MEMORY, REQ_HIGHPERF,
+)
+
+
+@dataclass
+class PopulationConfig:
+    base_rate: float = 2.0          # mean device check-ins per second
+    diurnal_amplitude: float = 0.6  # rate swing (Fig. 2a)
+    diurnal_phase: float = 0.0
+    cpu_med: float = 4.0            # log-normal medians / sigmas (Fig. 2b)
+    cpu_sigma: float = 0.5
+    mem_med: float = 4.0
+    mem_sigma: float = 0.55
+    cap_corr: float = 0.45          # cpu-mem correlation
+    speed_exponent: float = 0.7     # speed ~ (cpu/cpu_med)^exp * noise
+    speed_noise_sigma: float = 0.25
+    fail_base: float = 0.05         # failure probability, higher for slow devs
+    fail_slow_boost: float = 0.10
+    seed: int = 0
+
+
+class DeviceGenerator:
+    """Vectorized generator of (time, Device) check-ins."""
+
+    def __init__(self, cfg: PopulationConfig):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+
+    # --------------------------------------------------------------- rates
+
+    def rate(self, t: float) -> float:
+        c = self.cfg
+        return c.base_rate * (1.0 + c.diurnal_amplitude *
+                              math.sin(2 * math.pi * (t - c.diurnal_phase) / DAY))
+
+    def _max_rate(self) -> float:
+        return self.cfg.base_rate * (1.0 + self.cfg.diurnal_amplitude)
+
+    # ------------------------------------------------------------- sampling
+
+    def checkin_times(self, t0: float, t1: float) -> np.ndarray:
+        """Thinning sampler for the non-homogeneous Poisson process."""
+        lam = self._max_rate()
+        n = self.rng.poisson(lam * (t1 - t0))
+        ts = np.sort(self.rng.uniform(t0, t1, size=n))
+        keep = self.rng.uniform(0, lam, size=n) < np.array([self.rate(t) for t in ts])
+        return ts[keep]
+
+    def sample_devices(self, times: np.ndarray) -> List[Device]:
+        c, n = self.cfg, len(times)
+        z = self.rng.standard_normal((n, 2))
+        z1 = z[:, 0]
+        z2 = c.cap_corr * z[:, 0] + math.sqrt(1 - c.cap_corr ** 2) * z[:, 1]
+        cpu = c.cpu_med * np.exp(c.cpu_sigma * z1)
+        mem = c.mem_med * np.exp(c.mem_sigma * z2)
+        speed = (cpu / c.cpu_med) ** c.speed_exponent * np.exp(
+            c.speed_noise_sigma * self.rng.standard_normal(n))
+        return [
+            Device(caps={"cpu": float(cpu[i]), "mem": float(mem[i])},
+                   speed=float(speed[i]), checkin_time=float(times[i]))
+            for i in range(n)
+        ]
+
+    def stream(self, horizon: float, chunk: float = 6 * 3600.0
+               ) -> Iterator[Device]:
+        t = 0.0
+        while t < horizon:
+            hi = min(t + chunk, horizon)
+            for d in self.sample_devices(self.checkin_times(t, hi)):
+                yield d
+            t = hi
+
+    # ----------------------------------------------------- task execution
+
+    def response_time(self, device: Device, task_time_mean: float,
+                      sigma: float) -> float:
+        """Log-normal response time scaled by the device's speed."""
+        mu = math.log(task_time_mean / max(device.speed, 1e-3))
+        return float(np.exp(mu + sigma * self.rng.standard_normal()))
+
+    def fails(self, device: Device) -> bool:
+        p = self.cfg.fail_base + self.cfg.fail_slow_boost / (1.0 + device.speed)
+        return bool(self.rng.uniform() < p)

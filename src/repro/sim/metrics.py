@@ -1,0 +1,99 @@
+"""JCT metrics & breakdowns (§5 — the quantities behind Tables 1-4, Figs 5/11)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from ..core.types import Job, JobStatus
+
+
+@dataclass
+class RoundRecord:
+    job_id: int
+    round_index: int
+    submit: float
+    alloc_complete: Optional[float]
+    complete: float
+    demand: int
+    responses: int
+    failures: int
+    retries: int
+
+    @property
+    def scheduling_delay(self) -> float:
+        if self.alloc_complete is None:
+            return self.complete - self.submit
+        return self.alloc_complete - self.submit
+
+    @property
+    def response_collection(self) -> float:
+        if self.alloc_complete is None:
+            return 0.0
+        return self.complete - self.alloc_complete
+
+
+@dataclass
+class SimMetrics:
+    rounds: List[RoundRecord] = field(default_factory=list)
+    aborts: int = 0
+    failed_rounds: int = 0
+    jcts: Dict[int, float] = field(default_factory=dict)
+    unfinished: int = 0
+    makespan: float = 0.0
+    _jobs: List[Job] = field(default_factory=list)
+
+    def finalize(self, jobs: List[Job], now: float) -> None:
+        self._jobs = list(jobs)
+        self.makespan = now
+        for j in jobs:
+            if j.status is JobStatus.DONE and j.completion_time is not None:
+                self.jcts[j.job_id] = j.completion_time - j.arrival_time
+            else:
+                # pessimistic censoring: count elapsed time for unfinished jobs
+                self.jcts[j.job_id] = now - j.arrival_time
+                self.unfinished += 1
+
+    # ------------------------------------------------------------- queries
+
+    @property
+    def avg_jct(self) -> float:
+        return float(np.mean(list(self.jcts.values()))) if self.jcts else float("nan")
+
+    def avg_jct_of(self, job_ids) -> float:
+        vals = [self.jcts[i] for i in job_ids if i in self.jcts]
+        return float(np.mean(vals)) if vals else float("nan")
+
+    @property
+    def avg_scheduling_delay(self) -> float:
+        if not self.rounds:
+            return float("nan")
+        return float(np.mean([r.scheduling_delay for r in self.rounds]))
+
+    @property
+    def avg_response_collection(self) -> float:
+        if not self.rounds:
+            return float("nan")
+        return float(np.mean([r.response_collection for r in self.rounds]))
+
+    def speedup_vs(self, baseline: "SimMetrics") -> float:
+        return baseline.avg_jct / self.avg_jct
+
+    def fair_share_met_fraction(self, solo_jcts: Dict[int, float],
+                                num_jobs: Optional[int] = None) -> float:
+        """Fraction of jobs whose JCT <= M * sd_i (§4.4/Fig 14b)."""
+        m = num_jobs if num_jobs is not None else len(self.jcts)
+        met = [self.jcts[i] <= m * sd for i, sd in solo_jcts.items() if i in self.jcts]
+        return float(np.mean(met)) if met else float("nan")
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "avg_jct": self.avg_jct,
+            "avg_scheduling_delay": self.avg_scheduling_delay,
+            "avg_response_collection": self.avg_response_collection,
+            "aborts": float(self.aborts),
+            "failed_rounds": float(self.failed_rounds),
+            "unfinished": float(self.unfinished),
+            "makespan": self.makespan,
+        }

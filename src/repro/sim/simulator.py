@@ -1,0 +1,192 @@
+"""Event-driven simulator of the multi-job collaborative-learning environment.
+
+Implements the lifecycle of Figure 6: jobs submit per-round resource requests
+(①), devices check in over time (①), the scheduler assigns one job per device
+(②), devices execute and respond or drop (③–⑤).  Rounds complete when
+``quorum_fraction × demand`` responses arrive before the deadline; otherwise
+the round aborts and the request is resubmitted (fault tolerance is the job's
+concern, §3 — the simulator models it with quorum + deadline + retry).
+
+Event types (heapq-ordered by time, then a monotone sequence id):
+
+* ``JOB_ARRIVAL``     — job enters, submits round-0 request
+* ``DEVICE_CHECKIN``  — a device arrives and is matched (or leaves)
+* ``RESPONSE``        — a granted device reports back (ok / failed)
+* ``DEADLINE``        — response-collection deadline for one request attempt
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from ..core.baselines import BaseScheduler
+from ..core.types import Device, Job, JobRequest, JobStatus
+from .devices import DeviceGenerator, PopulationConfig
+from .metrics import RoundRecord, SimMetrics
+
+JOB_ARRIVAL, DEVICE_CHECKIN, RESPONSE, DEADLINE, DEVICE_CHUNK = 0, 1, 2, 3, 4
+
+
+@dataclass
+class SimConfig:
+    max_time: float = 14 * 24 * 3600.0      # hard stop (simulated seconds)
+    max_round_retries: int = 12             # give up on a round after this many aborts
+    seed: int = 0
+
+
+class Simulator:
+    def __init__(self, jobs: List[Job], scheduler: BaseScheduler,
+                 population: PopulationConfig, cfg: Optional[SimConfig] = None):
+        self.jobs = jobs
+        self.sched = scheduler
+        self.devgen = DeviceGenerator(population)
+        self.cfg = cfg or SimConfig()
+        self._seq = itertools.count()
+        self._heap: List[Tuple[float, int, int, object]] = []
+        self.metrics = SimMetrics()
+        self.now = 0.0
+
+    # ------------------------------------------------------------------ api
+
+    def run(self) -> SimMetrics:
+        for job in self.jobs:
+            self._push(job.arrival_time, JOB_ARRIVAL, job)
+        self._gen_until = 0.0
+        self._done = 0
+        self._gen_chunk(0.0)
+        while self._heap and self._done < len(self.jobs):
+            t, _, kind, payload = heapq.heappop(self._heap)
+            if t > self.cfg.max_time:
+                break
+            self.now = t
+            if kind == JOB_ARRIVAL:
+                self._on_job_arrival(payload)           # type: ignore[arg-type]
+            elif kind == DEVICE_CHECKIN:
+                self._on_checkin(payload)               # type: ignore[arg-type]
+            elif kind == RESPONSE:
+                self._on_response(*payload)             # type: ignore[misc]
+            elif kind == DEADLINE:
+                self._on_deadline(payload)              # type: ignore[arg-type]
+            elif kind == DEVICE_CHUNK:
+                self._gen_chunk(payload)                # type: ignore[arg-type]
+        self.metrics.finalize(self.jobs, self.now)
+        return self.metrics
+
+    # ------------------------------------------------------------ internals
+
+    def _push(self, t: float, kind: int, payload: object) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
+
+    def _gen_chunk(self, t0: float, chunk: float = 6 * 3600.0) -> None:
+        """Generate the device check-in stream lazily, one chunk at a time,
+        so short simulations never pay for the full horizon."""
+        t1 = min(t0 + chunk, self.cfg.max_time)
+        if t0 >= self.cfg.max_time:
+            return
+        times = self.devgen.checkin_times(t0, t1)
+        for dev in self.devgen.sample_devices(times):
+            self._push(dev.checkin_time, DEVICE_CHECKIN, dev)
+        self._gen_until = t1
+        if t1 < self.cfg.max_time:
+            self._push(t1, DEVICE_CHUNK, t1)
+
+    # ---- job lifecycle ----
+
+    def _on_job_arrival(self, job: Job) -> None:
+        self._submit_round(job, round_index=job.rounds_done)
+
+    def _submit_round(self, job: Job, round_index: int, aborted: int = 0) -> None:
+        req = JobRequest(job=job, round_index=round_index,
+                         demand=job.demand_per_round, submit_time=self.now,
+                         aborted=aborted)
+        job.current = req
+        job.status = JobStatus.WAITING
+        self.sched.on_request(req, self.now)
+
+    def _on_checkin(self, dev: Device) -> None:
+        req = self.sched.assign(dev, self.now)
+        if req is None or req.remaining <= 0 or req.complete_time is not None:
+            return                                     # device leaves unused
+        req.granted += 1
+        job = req.job
+        if job.first_service_time is None:
+            job.first_service_time = self.now
+        rt = self.devgen.response_time(dev, job.task_time_mean, job.task_time_sigma)
+        ok = not self.devgen.fails(dev)
+        self._push(self.now + rt, RESPONSE, (req, dev, rt, ok))
+        if req.granted >= req.demand and req.alloc_complete_time is None:
+            req.alloc_complete_time = self.now         # scheduling delay ends
+            job.status = JobStatus.COLLECTING
+            self._push(self.now + job.deadline, DEADLINE, req)
+
+    def _on_response(self, req: JobRequest, dev: Device, rt: float, ok: bool) -> None:
+        if req.complete_time is not None or req.job.current is not req:
+            return                                     # stale (round over/aborted)
+        self.sched.on_response(req, dev, rt, ok, self.now)
+        if ok:
+            req.responses += 1
+        else:
+            req.failures += 1
+        job = req.job
+        quorum = math.ceil(job.quorum_fraction * req.demand)
+        if req.responses >= quorum and req.alloc_complete_time is not None:
+            self._complete_round(req)
+
+    def _on_deadline(self, req: JobRequest) -> None:
+        if req.complete_time is not None or req.job.current is not req:
+            return
+        job = req.job
+        quorum = math.ceil(job.quorum_fraction * req.demand)
+        if req.responses >= quorum:
+            self._complete_round(req)
+            return
+        # round aborted: retry the same round (§5.1 random-baseline abortions)
+        self.metrics.aborts += 1
+        self.sched.on_complete(req, self.now)
+        job.current = None
+        if req.aborted + 1 >= self.cfg.max_round_retries:
+            # pathological starvation guard: count the round as failed-complete
+            job.rounds_done += 1
+            self.metrics.failed_rounds += 1
+            if job.rounds_done >= job.total_rounds:
+                self._finish_job(job)
+                return
+        self._submit_round(job, job.rounds_done, aborted=req.aborted + 1)
+
+    def _complete_round(self, req: JobRequest) -> None:
+        req.complete_time = self.now
+        job = req.job
+        job.rounds_done += 1
+        job.attained_service += self.now - req.submit_time
+        self.metrics.rounds.append(RoundRecord(
+            job_id=job.job_id,
+            round_index=req.round_index,
+            submit=req.submit_time,
+            alloc_complete=req.alloc_complete_time,
+            complete=self.now,
+            demand=req.demand,
+            responses=req.responses,
+            failures=req.failures,
+            retries=req.aborted,
+        ))
+        self.sched.on_complete(req, self.now)
+        job.current = None
+        if job.rounds_done >= job.total_rounds:
+            self._finish_job(job)
+        else:
+            self._submit_round(job, job.rounds_done)
+
+    def _finish_job(self, job: Job) -> None:
+        job.status = JobStatus.DONE
+        job.completion_time = self.now
+        self._done += 1
+
+
+def run_workload(jobs: List[Job], scheduler: BaseScheduler,
+                 population: Optional[PopulationConfig] = None,
+                 sim: Optional[SimConfig] = None) -> SimMetrics:
+    population = population or PopulationConfig()
+    return Simulator(jobs, scheduler, population, sim).run()

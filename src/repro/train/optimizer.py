@@ -1,0 +1,97 @@
+"""Optimizers as pure pytree transforms (no optax dependency).
+
+AdamW keeps fp32 first/second moments regardless of param dtype (the
+standard mixed-precision layout: bf16 weights + fp32 optimizer state); SGD
+with momentum is provided for the FL client local steps (FedAvg's inner
+optimizer).  Both expose ``init`` / ``update`` and work on abstract
+ShapeDtypeStruct trees, which is what lets the dry-run lower a full train
+step without allocating 671B parameters.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array          # () int32
+    mu: Any                  # fp32 pytree
+    nu: Any                  # fp32 pytree
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def init(self, params: Any) -> AdamWState:
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree.map(f32, params),
+                          nu=jax.tree.map(f32, params))
+
+    def abstract_state(self, abstract_params: Any) -> AdamWState:
+        f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+        return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                          mu=jax.tree.map(f32, abstract_params),
+                          nu=jax.tree.map(f32, abstract_params))
+
+    def update(self, grads: Any, state: AdamWState, params: Any
+               ) -> Tuple[Any, AdamWState]:
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.grad_clip > 0:
+            gn = global_norm(g32)
+            scale = jnp.minimum(1.0, self.grad_clip / (gn + 1e-9))
+            g32 = jax.tree.map(lambda g: g * scale, g32)
+        step = state.step + 1
+        c1 = 1.0 - self.b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - self.b2 ** step.astype(jnp.float32)
+        mu = jax.tree.map(lambda m, g: self.b1 * m + (1 - self.b1) * g,
+                          state.mu, g32)
+        nu = jax.tree.map(lambda v, g: self.b2 * v + (1 - self.b2) * g * g,
+                          state.nu, g32)
+
+        def upd(p, m, v):
+            mh, vh = m / c1, v / c2
+            delta = mh / (jnp.sqrt(vh) + self.eps) + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - self.lr * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamWState(step, mu, nu)
+
+
+@dataclass(frozen=True)
+class SGD:
+    lr: float = 0.01
+    momentum: float = 0.0
+
+    def init(self, params: Any) -> Any:
+        if self.momentum == 0.0:
+            return None
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(self, grads: Any, state: Any, params: Any) -> Tuple[Any, Any]:
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.momentum == 0.0:
+            new = jax.tree.map(
+                lambda p, g: (p.astype(jnp.float32) - self.lr * g).astype(p.dtype),
+                params, g32)
+            return new, None
+        vel = jax.tree.map(lambda v, g: self.momentum * v + g, state, g32)
+        new = jax.tree.map(
+            lambda p, v: (p.astype(jnp.float32) - self.lr * v).astype(p.dtype),
+            params, vel)
+        return new, vel
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))

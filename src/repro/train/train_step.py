@@ -1,0 +1,132 @@
+"""pjit train-step / serve-step factories: the functions the dry-run lowers
+and the drivers execute.
+
+``make_train_step`` returns (fn, in_shardings, out_shardings, donate) ready
+for ``jax.jit``: loss = token CE (+ MoE aux), grads via value_and_grad over
+the remat'd forward, AdamW update fused into the step (realistic memory
+picture: bf16 weights + fp32 moments are inputs AND outputs, donated).
+
+``make_prefill_step`` / ``make_decode_step`` are the serving counterparts;
+decode carries the KV/latent/SSM caches through donation (in-place ring
+update on TPU).
+
+Grad accumulation (microbatching) is a first-class option: the batch is
+split on a leading microbatch axis and scanned, trading step latency for
+activation memory — one of the §Perf levers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..dist.sharding import (DEFAULT_RULES, Rules, batch_sharding, dp_axes,
+                             param_shardings, replicated, spec_partition)
+from ..models.common import abstract_params, tree_map_specs
+from ..models.model import Model, build_model
+from .optimizer import AdamW
+
+
+def batch_shardings_for(model: Model, mesh: Mesh, batch_specs: Dict[str, Any]
+                        ) -> Dict[str, Any]:
+    dp = dp_axes(mesh)
+    out = {}
+    for k, v in batch_specs.items():
+        if k == "cache_len":
+            out[k] = replicated(mesh)
+        elif k == "caches":
+            out[k] = None   # handled separately
+        else:
+            nd = len(v.shape)
+            out[k] = NamedSharding(mesh, P(dp, *([None] * (nd - 1))))
+    return out
+
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh, *,
+                    rules: Optional[Rules] = None,
+                    optimizer: Optional[AdamW] = None,
+                    remat: bool = True,
+                    microbatch: int = 1):
+    """Returns (train_step, specs) where specs holds in/out shardings and the
+    abstract input pytrees for `.lower()`."""
+    rules = rules or DEFAULT_RULES
+    optimizer = optimizer or AdamW()
+    model = build_model(cfg)
+
+    from .optimizer import AdamWState
+    p_shard = param_shardings(model.param_specs(), mesh, rules)
+    opt_shard = AdamWState(step=replicated(mesh), mu=p_shard, nu=p_shard)
+
+    def loss_fn(params, batch):
+        return model.loss_fn(params, batch, remat=remat)
+
+    def train_step(params, opt_state, batch):
+        if microbatch > 1:
+            def micro(carry, mb):
+                loss_acc, grad_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (loss_acc + l,
+                        jax.tree.map(jnp.add, grad_acc, g)), None
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mbatch = jax.tree.map(
+                lambda x: x.reshape(microbatch, x.shape[0] // microbatch,
+                                    *x.shape[1:]), batch)
+            (loss, grads), _ = jax.lax.scan(micro, (0.0, zeros), mbatch)
+            loss = loss / microbatch
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        return loss, new_params, new_opt
+
+    specs = {
+        "params_shardings": p_shard,
+        "opt_shardings": opt_shard,
+        "abstract_params": model.abstract_params(),
+        "abstract_opt": optimizer.abstract_state(model.abstract_params()),
+        "out_shardings": (replicated(mesh), p_shard, opt_shard),
+    }
+    return train_step, specs
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh, *,
+                      rules: Optional[Rules] = None):
+    rules = rules or DEFAULT_RULES
+    model = build_model(cfg)
+    p_shard = param_shardings(model.param_specs(), mesh, rules)
+
+    def prefill_step(params, batch):
+        logits, caches = model.prefill(params, batch)
+        return logits, caches
+
+    return prefill_step, {
+        "params_shardings": p_shard,
+        "abstract_params": model.abstract_params(),
+    }
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh, *,
+                     rules: Optional[Rules] = None,
+                     cache_batch: int = 1, cache_seq: int = 0):
+    """serve_step: one new token against a cache of length `cache_seq`."""
+    rules = rules or DEFAULT_RULES
+    model = build_model(cfg)
+    p_shard = param_shardings(model.param_specs(), mesh, rules)
+    cache_specs_tree = model.cache_param_specs(cache_batch, cache_seq)
+    cache_shard = [param_shardings(c, mesh, rules) for c in cache_specs_tree]
+
+    def decode_step(params, caches, token, cache_len):
+        logits, new_caches = model.decode_step(params, caches, token, cache_len)
+        return logits, new_caches
+
+    return decode_step, {
+        "params_shardings": p_shard,
+        "abstract_params": model.abstract_params(),
+        "cache_shardings": cache_shard,
+        "abstract_caches": [abstract_params(c) for c in cache_specs_tree],
+    }

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# tests run with `PYTHONPATH=src pytest tests/`; this fallback makes bare
+# `pytest` work too.  Do NOT set XLA device-count flags here — smoke tests
+# must see the real (single-CPU) device; only dryrun.py forces 512.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

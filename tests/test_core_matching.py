@@ -1,0 +1,62 @@
+"""Algorithm 2 (tier-based matching): trigger condition & tier math."""
+import random
+
+from repro.core.matching import JobProfile, TierMatcher
+from repro.core.types import Job, Requirement
+
+
+def _job():
+    return Job(job_id=0, requirement=Requirement.of("r"), demand_per_round=10,
+               total_rounds=1, arrival_time=0.0)
+
+
+def _profile(speeds_rts):
+    p = JobProfile()
+    for s, rt in speeds_rts:
+        p.record(s, rt)
+    return p
+
+
+def test_no_profile_no_tiering():
+    m = TierMatcher(num_tiers=4, rng=random.Random(0))
+    d = m.decide(_job(), JobProfile(), t_schedule=10.0, t_response=100.0)
+    assert not d.tiered
+
+
+def test_trigger_condition_v_plus_gc():
+    """Tiering triggers iff V + g_u*c < 1 + c  (Alg. 2 line 7)."""
+    # strongly bimodal speeds: fast tier halves the p95
+    samples = [(0.5, 200.0)] * 50 + [(4.0, 25.0)] * 50
+    m = TierMatcher(num_tiers=2, rng=random.Random(3))
+    # big c (response-dominated): tiering should trigger for the fast tier
+    decisions = [m.decide(_job(), _profile(samples), t_schedule=1.0,
+                          t_response=1000.0) for _ in range(40)]
+    trig = [d for d in decisions if d.tiered]
+    assert trig, "high response/schedule ratio should enable tiering"
+    for d in trig:
+        assert d.v + d.g_u * d.c_i < d.c_i + 1.0
+    # c ~ 0 (schedule-dominated): tiering never pays (V > 1)
+    d = m.decide(_job(), _profile(samples), t_schedule=1e9, t_response=1.0)
+    assert not d.tiered
+
+
+def test_tier_accepts_band():
+    samples = [(s / 10.0, 100.0 / (s / 10.0)) for s in range(1, 101)]
+    m = TierMatcher(num_tiers=4, rng=random.Random(1))
+    d = m.decide(_job(), _profile(samples), t_schedule=1.0, t_response=1e4)
+    if d.tiered:
+        from repro.core.types import Device
+        dev_in = Device(caps={}, speed=(d.speed_lo + min(d.speed_hi, 20)) / 2)
+        assert d.accepts(dev_in)
+        if d.speed_lo > 0:
+            assert not d.accepts(Device(caps={}, speed=d.speed_lo * 0.5))
+
+
+def test_g_u_is_tail_ratio():
+    samples = [(1.0, 100.0)] * 64 + [(10.0, 10.0)] * 64
+    m = TierMatcher(num_tiers=2, rng=random.Random(0))
+    lo, hi = m._tier_bounds(sorted(s for s, _ in samples), 1)  # fast tier
+    g = m._tier_speedup(_profile(samples), lo, hi)
+    assert g < 0.5, f"fast tier should shrink the p95 tail, g={g}"
+    g_slow = m._tier_speedup(_profile(samples), 0.0, lo)
+    assert g_slow >= 0.99, "slow tier p95 ~ overall p95"

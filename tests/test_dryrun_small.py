@@ -1,0 +1,99 @@
+"""Small-mesh dry-run: exercises the dryrun/roofline pipeline in-process.
+
+The production 512-device sweep runs via `python -m repro.launch.dryrun`
+(subprocess — it must set XLA_FLAGS first).  Here we validate the pipeline
+logic itself on reduced configs over a 1-device mesh: lowering, compiling,
+cost composition and JSON record shape all work for each step kind.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.dist.sharding import DEFAULT_RULES, param_shardings
+from repro.launch.roofline import graph_cost, roofline_terms
+from repro.models.model import build_model
+from repro.train.train_step import (make_decode_step, make_prefill_step,
+                                    make_train_step)
+
+
+def _mesh():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "mixtral-8x22b", "mamba2-1.3b"])
+def test_train_step_lowers_and_costs(arch):
+    cfg = get_config(arch).reduced()
+    mesh = _mesh()
+    model = build_model(cfg)
+    with mesh:
+        fn, specs = make_train_step(cfg, mesh)
+        batch = model.input_specs(32, 4, "train")
+        comp = jax.jit(fn, in_shardings=(specs["params_shardings"],
+                                         specs["opt_shardings"],
+                                         {k: NamedSharding(mesh, P("data"))
+                                          for k in batch})
+                       ).lower(specs["abstract_params"],
+                               specs["abstract_opt"], batch).compile()
+    cost = graph_cost(comp)
+    assert cost.flops > 0 and cost.bytes_accessed > 0
+    ma = comp.memory_analysis()
+    assert ma.temp_size_in_bytes >= 0
+
+
+def test_decode_step_lowers():
+    cfg = get_config("llama3.2-1b").reduced()
+    mesh = _mesh()
+    model = build_model(cfg)
+    with mesh:
+        fn, specs = make_decode_step(cfg, mesh, cache_batch=4, cache_seq=64)
+        dec = model.input_specs(64, 4, "decode")
+        comp = jax.jit(fn).lower(specs["abstract_params"],
+                                 specs["abstract_caches"],
+                                 dec["token"], dec["cache_len"]).compile()
+    assert graph_cost(comp).flops > 0
+
+
+def test_block_composition_scales_with_count():
+    """Composed totals must scale ~linearly in layer count."""
+    mesh = _mesh()
+    costs = {}
+    for L in (2, 4):
+        cfg = get_config("llama3.2-1b").reduced().with_(n_layers=L)
+        model = build_model(cfg)
+        with mesh:
+            fn, specs = make_train_step(cfg, mesh)
+            batch = model.input_specs(32, 4, "train")
+            comp = jax.jit(fn).lower(specs["abstract_params"],
+                                     specs["abstract_opt"], batch).compile()
+            total = graph_cost(comp)
+            for blk in model.block_fns("train", 32, 4):
+                ab = dict(blk["abstract"])
+                ab.pop("cache_spec", None)
+                order = [k for k in ("bp", "cache", "x", "vis", "cache_len")
+                         if k in ab]
+                bcomp = jax.jit(blk["fn"]).lower(
+                    *[ab[k] for k in order]).compile()
+                total = total + graph_cost(bcomp).scaled(blk["count"] - 1)
+        costs[L] = total.flops
+    ratio = costs[4] / costs[2]
+    assert 1.6 <= ratio <= 2.4, f"expected ~2x flops for 2x layers, got {ratio}"
+
+
+def test_roofline_terms_sane_units():
+    cfg = get_config("llama3.2-1b").reduced()
+    model = build_model(cfg)
+    mesh = _mesh()
+    with mesh:
+        fn, specs = make_train_step(cfg, mesh)
+        batch = model.input_specs(32, 4, "train")
+        comp = jax.jit(fn).lower(specs["abstract_params"],
+                                 specs["abstract_opt"], batch).compile()
+    r = roofline_terms(graph_cost(comp), 1,
+                       6.0 * model.n_active_params() * 32 * 4)
+    assert r.compute_s > 0 and r.memory_s > 0
+    assert r.bottleneck in ("compute", "memory", "collective")
+    assert 0 <= r.mfu_bound <= 1.5

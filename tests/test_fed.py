@@ -1,0 +1,121 @@
+"""FL data plane: local update, aggregation equivalence, compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.synthetic import SyntheticLM, dirichlet_client_mixes
+from repro.fed.aggregation import FedAdam, FedAvg, aggregate_deltas
+from repro.fed.client import make_local_update
+from repro.fed.compression import (QuantizeConfig, compress, compressed_bytes,
+                                   decompress, topk_densify, topk_sparsify)
+from repro.fed.overcommit import OvercommitPolicy
+from repro.models.model import build_model
+
+
+def _tiny_model():
+    cfg = get_config("llama3.2-1b").reduced().with_(n_layers=2, vocab=128)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _batches(cfg, steps, B, T, seed):
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=T, seed=seed)
+    bs = [data.batch(B, seed=s) for s in range(steps)]
+    return {k: jnp.stack([jnp.asarray(b[k]) for b in bs]) for k in bs[0]}
+
+
+def test_local_update_reduces_loss():
+    cfg, model, params = _tiny_model()
+    upd = make_local_update(model, lr=0.1, local_steps=4)
+    batches = _batches(cfg, 4, 4, 16, seed=0)
+    delta, metrics = upd(params, batches)
+    assert float(metrics["loss_last"]) < float(metrics["loss_first"])
+    assert any(float(jnp.abs(d).max()) > 0 for d in jax.tree.leaves(delta))
+
+
+def test_aggregate_kernel_equals_ref():
+    cfg, model, params = _tiny_model()
+    rng = np.random.default_rng(0)
+    deltas = [jax.tree.map(lambda p: jnp.asarray(
+        rng.standard_normal(p.shape), jnp.float32), params) for _ in range(5)]
+    w = [1.0, 2.0, 0.5, 3.0, 1.5]
+    a = aggregate_deltas(deltas, w, use_kernel=True, min_kernel_size=1)
+    b = aggregate_deltas(deltas, w, use_kernel=False)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_fedavg_round_improves_global_loss():
+    cfg, model, params = _tiny_model()
+    upd = make_local_update(model, lr=0.1, local_steps=2)
+    mixes = dirichlet_client_mixes(4, 8, alpha=0.5, seed=1)
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=16, seed=9)
+    eval_batch = {k: jnp.asarray(v) for k, v in data.batch(8, seed=99).items()}
+    loss0 = float(model.loss_fn(params, eval_batch))
+    server = FedAvg(server_lr=1.0)
+    state = server.init(params)
+    for rnd in range(2):
+        deltas, sizes = [], []
+        for c in range(4):
+            batches = _batches(cfg, 2, 4, 16, seed=100 + 10 * rnd + c)
+            d, _ = upd(params, batches)
+            deltas.append(d)
+            sizes.append(1.0)
+        agg = aggregate_deltas(deltas, sizes)
+        params, state = server.apply(params, agg, state)
+    loss1 = float(model.loss_fn(params, eval_batch))
+    assert loss1 < loss0, f"FedAvg should reduce eval loss ({loss0} -> {loss1})"
+
+
+def test_fedadam_applies_update():
+    cfg, model, params = _tiny_model()
+    server = FedAdam(lr=1e-2)
+    state = server.init(params)
+    delta = jax.tree.map(lambda p: jnp.ones_like(p, jnp.float32) * 0.01, params)
+    new, state = server.apply(params, delta, state)
+    assert int(state.step) == 1
+    assert any(float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max()) > 0
+               for a, b in zip(jax.tree.leaves(new), jax.tree.leaves(params)))
+
+
+def test_compression_roundtrip_and_ratio():
+    rng = np.random.default_rng(0)
+    tree = {"a": jnp.asarray(rng.standard_normal((512, 16)), jnp.float32),
+            "b": jnp.asarray(rng.standard_normal((1000,)), jnp.float32)}
+    packed = compress(tree, QuantizeConfig(block=256))
+    out = decompress(packed, QuantizeConfig(block=256))
+    for k in tree:
+        x, y = np.asarray(tree[k]), np.asarray(out[k])
+        assert y.shape == x.shape
+        assert np.abs(x - y).max() <= np.abs(x).max() / 127.0 + 1e-6
+    raw = sum(l.size * 4 for l in jax.tree.leaves(tree))
+    assert compressed_bytes(packed) < 0.35 * raw     # ~4x uplink reduction
+
+
+def test_topk_sparsify_roundtrip():
+    rng = np.random.default_rng(1)
+    x = {"w": jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)}
+    packed = topk_sparsify(x, frac=0.05)
+    dense = topk_densify(packed)
+    got = np.asarray(dense["w"]).reshape(-1)
+    want = np.asarray(x["w"]).reshape(-1)
+    k = packed["w"]["idx"].shape[0]
+    nz = np.flatnonzero(got)
+    assert len(nz) == k
+    np.testing.assert_allclose(got[nz], want[nz])
+    thresh = np.sort(np.abs(want))[-k]
+    assert (np.abs(want[nz]) >= thresh - 1e-6).all()
+
+
+def test_overcommit_tracks_failure_rate():
+    pol = OvercommitPolicy(base=1.3)
+    for _ in range(10):
+        pol.observe_round(granted=100, responded=60)   # 40% failures
+    f = pol.factor(quorum_fraction=0.8)
+    assert f > 1.25, "high failure rate should raise overcommit"
+    for _ in range(20):
+        pol.observe_round(granted=100, responded=100)
+    assert pol.factor(0.8) < f, "perfect rounds should shrink overcommit"

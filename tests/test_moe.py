@@ -1,0 +1,111 @@
+"""MoE dispatch: grouped scatter-free path vs global path vs dense oracle.
+
+These pin the §Perf optimization's correctness contract: grouped dispatch
+(the production default) must be *exactly* the same function as the global
+path and the dense no-capacity reference when capacity is ample — forward
+AND gradients (the backward is a hand-written custom-VJP of gathers).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.common import materialize
+from repro.models.ffn import gated_mlp
+from repro.models.moe import auto_groups, moe_ffn, moe_specs
+
+D, E, K = 32, 8, 2
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = jax.tree.map(
+        lambda a: a.astype(jnp.float32),
+        materialize(moe_specs(D, 64, E, n_shared=1), jax.random.PRNGKey(0)))
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((2, 64, D)),
+                    jnp.float32)
+    return params, x
+
+
+def _dense_ref(params, x):
+    B, T, _ = x.shape
+    xf = x.reshape(-1, D)
+    logits = xf @ params["router"]
+    gates = jax.nn.softmax(logits, -1)
+    _, idx = jax.lax.top_k(logits, K)
+    g = jnp.take_along_axis(gates, idx, -1)
+    g = g / g.sum(-1, keepdims=True)
+    out = jnp.zeros_like(xf)
+    for e in range(E):
+        h = jax.nn.silu(xf @ params["w_gate"][e]) * (xf @ params["w_up"][e])
+        ye = h @ params["w_down"][e]
+        w = jnp.where(idx == e, g, 0.0).sum(-1)
+        out = out + w[:, None] * ye
+    return (out + gated_mlp(params["shared"], xf, "silu")).reshape(B, T, D)
+
+
+@pytest.mark.parametrize("groups", [2, 4, 8])
+def test_grouped_equals_global_forward(setup, groups):
+    params, x = setup
+    y1, a1 = moe_ffn(params, x, top_k=K, capacity_factor=8.0, groups=1)
+    yg, ag = moe_ffn(params, x, top_k=K, capacity_factor=8.0, groups=groups)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(yg),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(float(a1), float(ag), rtol=1e-5)
+
+
+def test_grouped_equals_dense_oracle(setup):
+    params, x = setup
+    yg, _ = moe_ffn(params, x, top_k=K, capacity_factor=8.0, groups=4)
+    yd = _dense_ref(params, x)
+    np.testing.assert_allclose(np.asarray(yg), np.asarray(yd),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_custom_vjp_gradients_match_autodiff(setup):
+    """Grouped path gradients (custom-VJP gathers) == global-path autodiff."""
+    params, x = setup
+
+    def loss(p, x, g):
+        y, aux = moe_ffn(p, x, top_k=K, capacity_factor=8.0, groups=g)
+        return jnp.mean(y ** 2) + 0.01 * aux
+
+    l1, g1 = jax.value_and_grad(loss, argnums=(0, 1))(params, x, 1)
+    l4, g4 = jax.value_and_grad(loss, argnums=(0, 1))(params, x, 4)
+    assert float(abs(l1 - l4)) < 1e-6
+    errs = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()), g1, g4)
+    assert max(jax.tree.leaves(errs)) < 1e-6
+
+
+def test_tight_capacity_drops_gracefully(setup):
+    params, x = setup
+    for groups in (1, 4):
+        y, aux = moe_ffn(params, x, top_k=K, capacity_factor=0.25,
+                         groups=groups)
+        assert bool(jnp.isfinite(y).all()) and bool(jnp.isfinite(aux))
+        # dropped tokens pass through residually upstream; here just bounded
+        assert float(jnp.abs(y).max()) < 1e3
+
+
+def test_capacity_zero_tokens_all_dropped(setup):
+    """cap floor is 1 slot: output contributions limited, never NaN."""
+    params, x = setup
+    y, _ = moe_ffn(params, x, top_k=K, capacity_factor=1e-9, groups=4)
+    assert bool(jnp.isfinite(y).all())
+
+
+def test_auto_groups_divides_tokens():
+    for n in (64, 2048, 4096, 1_048_576, 333):
+        g = auto_groups(n)
+        assert n % g == 0 and g >= 1
+
+
+def test_router_bias_changes_routing_not_gates(setup):
+    """DeepSeek aux-free balancing: bias shifts selection only."""
+    params, x = setup
+    bias = jnp.zeros((E,), jnp.float32).at[0].set(100.0)  # force expert 0
+    y_b, _ = moe_ffn(params, x, top_k=K, capacity_factor=8.0, groups=1,
+                     router_bias=bias)
+    y_n, _ = moe_ffn(params, x, top_k=K, capacity_factor=8.0, groups=1)
+    assert float(jnp.abs(y_b - y_n).max()) > 1e-6  # routing did change
+    assert bool(jnp.isfinite(y_b).all())

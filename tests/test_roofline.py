@@ -1,0 +1,87 @@
+"""Roofline machinery: scan-composition property + collective parsing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.roofline import (GraphCost, parse_collectives,
+                                   roofline_terms)
+
+
+def test_scan_composition_equals_unrolled():
+    """total = cost(scan graph) + (L-1)·cost(block) == cost(unrolled graph).
+    This is the property the whole §Roofline table rests on."""
+    L, D = 6, 128
+
+    def block(x, w):
+        return jnp.tanh(x @ w)
+
+    def scanned(x, ws):
+        def body(c, w):
+            return block(c, w), None
+        y, _ = jax.lax.scan(body, x, ws)
+        return jnp.sum(y)
+
+    def unrolled(x, ws):
+        for i in range(L):
+            x = block(x, ws[i])
+        return jnp.sum(x)
+
+    x = jax.ShapeDtypeStruct((8, D), jnp.float32)
+    ws = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
+    w1 = jax.ShapeDtypeStruct((D, D), jnp.float32)
+
+    scan_flops = jax.jit(scanned).lower(x, ws).compile().cost_analysis()["flops"]
+    unroll_flops = jax.jit(unrolled).lower(x, ws).compile().cost_analysis()["flops"]
+    block_flops = jax.jit(lambda x, w: jnp.sum(block(x, w))).lower(
+        x, w1).compile().cost_analysis()["flops"]
+
+    composed = scan_flops + (L - 1) * block_flops
+    # block program includes its own jnp.sum epilogue; allow 5% slack
+    assert composed == pytest.approx(unroll_flops, rel=0.05)
+    # and the raw scan graph badly undercounts (the bug we're correcting)
+    assert scan_flops < 0.5 * unroll_flops
+
+
+def test_parse_collectives_factors():
+    hlo = """
+  %ar = f32[1024,16]{1,0} all-reduce(%x), channel_id=1, replica_groups=[16,16]<=[256]
+  %ag = bf16[512,128]{1,0} all-gather(%y), channel_id=2, replica_groups=[2,8]<=[16]
+  %rs = f32[64]{0} reduce-scatter(%z), channel_id=3, replica_groups=[1,4]<=[4]
+  %cp = f32[32,32]{1,0} collective-permute(%w), channel_id=4
+"""
+    st = parse_collectives(hlo)
+    assert st.counts == {"all-reduce": 1, "all-gather": 1,
+                         "reduce-scatter": 1, "collective-permute": 1}
+    ar = 2 * 15 / 16 * 1024 * 16 * 4
+    ag = 7 / 8 * 512 * 128 * 2
+    rs = 3 * 64 * 4
+    cp = 32 * 32 * 4
+    assert st.by_op["all-reduce"] == pytest.approx(ar)
+    assert st.by_op["all-gather"] == pytest.approx(ag)
+    assert st.by_op["reduce-scatter"] == pytest.approx(rs)
+    assert st.by_op["collective-permute"] == pytest.approx(cp)
+    assert st.link_bytes == pytest.approx(ar + ag + rs + cp)
+
+
+def test_roofline_bottleneck_identification():
+    from repro.launch.roofline import CollectiveStats
+    g = GraphCost(flops=1e12, bytes_accessed=1e9,
+                  collectives=CollectiveStats(link_bytes=1e6))
+    r = roofline_terms(g, n_devices=256, model_flops=2e14)
+    assert r.bottleneck == "compute"
+    assert r.compute_s == pytest.approx(1e12 / 197e12)
+    assert 0 < r.mfu_bound <= 1.0
+    g2 = GraphCost(flops=1e9, bytes_accessed=1e12,
+                   collectives=CollectiveStats(link_bytes=1e6))
+    assert roofline_terms(g2, 256, 1e12).bottleneck == "memory"
+
+
+def test_graphcost_algebra():
+    from repro.launch.roofline import CollectiveStats
+    a = GraphCost(1.0, 2.0, CollectiveStats({"all-reduce": 1}, 10.0, 12.0,
+                                            {"all-reduce": 10.0}))
+    b = (a + a).scaled(2.0)
+    assert b.flops == 4.0 and b.bytes_accessed == 8.0
+    assert b.collectives.link_bytes == 40.0
+    assert b.collectives.by_op["all-reduce"] == 40.0

@@ -1,0 +1,90 @@
+"""Sharding rules: divisibility-aware greedy assignment invariants."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.dist.sharding import (DEFAULT_RULES, LONG_CONTEXT_RULES,
+                                 spec_partition)
+from repro.models.common import ParamSpec, is_spec
+from repro.models.model import build_model
+
+
+class FakeMesh:
+    def __init__(self, shape, names):
+        self.axis_names = names
+        import numpy as np
+        self.devices = np.zeros(shape)
+
+
+MESH = FakeMesh((16, 16), ("data", "model"))
+MESH3 = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def _spec(shape, axes):
+    return ParamSpec(tuple(shape), tuple(axes))
+
+
+def test_divisible_dims_get_sharded():
+    p = spec_partition(_spec((4096, 8192), ("embed", "mlp")), MESH, DEFAULT_RULES)
+    assert tuple(p) == ("data", "model")
+
+
+def test_indivisible_falls_back_to_replicated():
+    # 8 experts cannot shard over 16-way model axis (mixtral case)
+    p = spec_partition(_spec((8, 6144, 16384),
+                             ("experts", "embed", "moe_mlp")), MESH,
+                       DEFAULT_RULES)
+    assert tuple(p) == (None, "data", "model")
+
+
+def test_deepseek_experts_shard():
+    p = spec_partition(_spec((256, 7168, 2048),
+                             ("experts", "embed", "moe_mlp")), MESH,
+                       DEFAULT_RULES)
+    # experts take model; moe_mlp cannot reuse model -> unsharded (trailing
+    # Nones trimmed)
+    assert tuple(p) == ("model", "data")
+
+
+def test_axis_never_reused_within_tensor():
+    p = spec_partition(_spec((1024, 1024), ("mlp", "heads_mlp")), MESH,
+                       DEFAULT_RULES)
+    used = [a for a in tuple(p) if a]
+    assert len(used) == len(set(used))
+
+
+def test_long_context_rules_shard_kv_seq():
+    p = spec_partition(_spec((1, 524288, 16, 128),
+                             ("batch", "kv_seq", "kv_heads", None)), MESH,
+                       LONG_CONTEXT_RULES)
+    assert tuple(p)[1] == ("data", "model")
+
+
+def test_every_arch_has_valid_param_shardings():
+    """spec_partition never proposes indivisible shards for any arch."""
+    for arch in ARCHS:
+        model = build_model(get_config(arch))
+        specs = model.param_specs()
+        leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+        sizes = {"data": 16, "model": 16}
+        for s in leaves:
+            p = spec_partition(s, MESH, DEFAULT_RULES)
+            for dim, part in zip(s.shape, tuple(p)):
+                if part is None:
+                    continue
+                parts = (part,) if isinstance(part, str) else part
+                k = 1
+                for a in parts:
+                    k *= sizes[a]
+                assert dim % k == 0, (arch, s.shape, tuple(p))
+
+
+def test_multipod_pod_axis_unused_by_default():
+    """Baseline: params replicate across pods (pure DP); only FSDP_POD uses it."""
+    from repro.dist.sharding import FSDP_POD_RULES
+    s = _spec((8192, 4096), ("embed", "mlp"))
+    p_default = spec_partition(s, MESH3, DEFAULT_RULES)
+    assert "pod" not in jax.tree.leaves(tuple(p_default))
+    p_fsdp = spec_partition(s, MESH3, FSDP_POD_RULES)
+    assert tuple(p_fsdp)[0] == ("data", "pod")

@@ -1,0 +1,88 @@
+"""End-to-end behaviour tests for the paper's system (Venn + simulator):
+the claims of §5 at test scale — ordering, component contributions,
+fairness knob direction, starvation guard."""
+import math
+
+import pytest
+
+from repro.core import SCHEDULERS, VennScheduler
+from repro.sim import (JobTraceConfig, PopulationConfig, SimConfig,
+                       generate_jobs, run_workload)
+
+POP = PopulationConfig(seed=11, base_rate=2.0)
+SIM = SimConfig(max_time=14 * 24 * 3600.0)
+
+
+def _run(name, n_jobs=16, seed=3, **sched_kw):
+    jobs = generate_jobs(JobTraceConfig(num_jobs=n_jobs, seed=seed))
+    sched = SCHEDULERS[name](seed=seed, **sched_kw) if name == "venn" \
+        else SCHEDULERS[name](seed=seed)
+    return run_workload(jobs, sched, POP, SIM)
+
+
+def test_all_jobs_finish():
+    for name in SCHEDULERS:
+        m = _run(name, n_jobs=8)
+        assert m.unfinished == 0, f"{name} left jobs unfinished"
+
+
+def test_venn_beats_random_on_avg_jct():
+    """The paper's headline direction (Table 1) at test scale."""
+    rnd = _run("random")
+    venn = _run("venn")
+    assert venn.avg_jct < rnd.avg_jct, (
+        f"venn {venn.avg_jct:.0f}s should beat random {rnd.avg_jct:.0f}s")
+
+
+def test_venn_beats_fifo():
+    fifo = _run("fifo")
+    venn = _run("venn")
+    assert venn.avg_jct < fifo.avg_jct * 1.02
+
+
+def test_scheduling_delay_is_what_venn_improves():
+    """Venn's win comes from scheduling delay (Fig. 5/11 mechanism)."""
+    rnd = _run("random")
+    venn = _run("venn")
+    assert venn.avg_scheduling_delay < rnd.avg_scheduling_delay
+
+
+def test_irs_component_contributes():
+    """Ablation: Venn w/o IRS (FIFO order + matching) is no better than full
+    Venn under contention (Fig. 11)."""
+    full = _run("venn")
+    no_irs = _run("venn", enable_irs=False)
+    assert full.avg_jct <= no_irs.avg_jct * 1.05
+
+
+def test_fairness_knob_direction():
+    """ε > 0 must not *improve* avg JCT (it trades JCT for fairness)."""
+    base = _run("venn", epsilon=0.0)
+    fair = _run("venn", epsilon=2.0)
+    assert fair.avg_jct >= base.avg_jct * 0.9
+
+
+def test_scheduler_invocation_count_bounded():
+    """Venn recomputes only on request arrival/completion (+ lazy atom
+    misses), never per device check-in."""
+    jobs = generate_jobs(JobTraceConfig(num_jobs=8, seed=5))
+    sched = VennScheduler(seed=5)
+    m = run_workload(jobs, sched, POP, SIM)
+    n_rounds = len(m.rounds) + m.aborts
+    # 2 events per request (submit/complete) + slack for lazy atom replans
+    assert sched.sched_invocations <= 2 * n_rounds + 200
+
+
+def test_deadline_abort_and_retry_path():
+    """Impossible quorum within deadline -> rounds abort and retry, and the
+    starvation guard eventually completes the job."""
+    jobs = generate_jobs(JobTraceConfig(num_jobs=2, seed=7, demand_lo=400,
+                                        demand_hi=500, rounds_lo=1,
+                                        rounds_hi=2))
+    for j in jobs:
+        j.deadline = 30.0       # absurdly tight
+    m = run_workload(jobs, SCHEDULERS["random"](seed=7),
+                     PopulationConfig(seed=7, base_rate=0.5),
+                     SimConfig(max_time=6 * 24 * 3600.0, max_round_retries=3))
+    assert m.aborts > 0
+    assert m.failed_rounds > 0 or m.unfinished == 0

@@ -1,6 +1,7 @@
 """Venn core: the paper's contribution — IRS scheduling (Alg 1), tier-based
 device matching (Alg 2), fairness knob, supply estimation, and baselines."""
 from .baselines import BaseScheduler, FifoScheduler, RandomScheduler, SrsfScheduler
+from .dispatch import DispatchTable, MISS, compile_plan
 from .eligibility import EligibilityIndex
 from .fairness import FairnessPolicy
 from .irs import SchedulePlan, venn_schedule
@@ -17,8 +18,9 @@ SCHEDULERS = {
 }
 
 __all__ = [
-    "Assignment", "BaseScheduler", "Device", "EligibilityIndex", "FairnessPolicy",
-    "FifoScheduler", "Job", "JobGroup", "JobProfile", "JobRequest", "JobStatus",
-    "RandomScheduler", "Requirement", "SCHEDULERS", "SchedulePlan", "SrsfScheduler",
-    "SupplyEstimator", "TierDecision", "TierMatcher", "VennScheduler", "venn_schedule",
+    "Assignment", "BaseScheduler", "Device", "DispatchTable", "EligibilityIndex",
+    "FairnessPolicy", "FifoScheduler", "Job", "JobGroup", "JobProfile",
+    "JobRequest", "JobStatus", "MISS", "RandomScheduler", "Requirement",
+    "SCHEDULERS", "SchedulePlan", "SrsfScheduler", "SupplyEstimator",
+    "TierDecision", "TierMatcher", "VennScheduler", "compile_plan", "venn_schedule",
 ]

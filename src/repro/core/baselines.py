@@ -18,44 +18,90 @@ Every scheduler implements the same interface the simulator drives:
     on_request(request, now)   — a job submitted a round request
     on_complete(request, now)  — a request finished/aborted
     assign(device, now)        — a device checked in; return a JobRequest or None
+    on_response(...)           — response feedback (Venn profiles tiers)
+
+plus the vectorized check-in fast path shared by every scheduler:
+
+    classify_caps(caps)        — struct-of-arrays chunk -> interned atom ids
+    begin_chunk(times, ids)    — hand the chunk to the scheduler (supply feed)
+    checkin(atom_id, ...)      — O(1) assignment by interned atom id
+
+The base implementation of ``checkin`` resolves eligibility through a per-atom
+cache of the pending-request list (rebuilt only when the request ordering
+changes), so even the baselines avoid per-check-in ``Requirement.matches``
+scans.
 """
 from __future__ import annotations
 
 import random
-from typing import List, Optional
+from typing import Dict, List, Optional
 
+import numpy as np
+
+from .eligibility import EligibilityIndex
 from .types import Device, JobRequest
 
 
 class BaseScheduler:
-    """Common bookkeeping: the set of outstanding requests."""
+    """Common bookkeeping: the outstanding requests + the eligibility index."""
 
     name = "base"
 
     def __init__(self, seed: int = 0):
         self.rng = random.Random(seed)
         self.pending: List[JobRequest] = []
+        self.index = EligibilityIndex([])
+        # atom id -> pending requests eligible for that atom, in service order
+        self._atom_cache: Dict[int, List[JobRequest]] = {}
 
     # ---- simulator hooks --------------------------------------------------
 
     def on_request(self, request: JobRequest, now: float) -> None:
+        self.index.add_requirement(request.requirement)
         self.pending.append(request)
         self._resort(now)
+        self._atom_cache.clear()
 
     def on_complete(self, request: JobRequest, now: float) -> None:
         if request in self.pending:
             self.pending.remove(request)
         self._resort(now)
+        self._atom_cache.clear()
 
     def assign(self, device: Device, now: float) -> Optional[JobRequest]:
-        for req in self.pending:
-            if req.remaining > 0 and req.requirement.matches(device):
-                return req
-        return None
+        return self.checkin(self.index.atom_id_of(device), 0.0, 0.0,
+                            device.speed, now)
 
     def on_response(self, request: JobRequest, device: Device,
                     response_time: float, ok: bool, now: float) -> None:
         """Response feedback — baselines ignore it (Venn profiles tiers)."""
+
+    # ---- vectorized check-in fast path ------------------------------------
+
+    @property
+    def atom_version(self) -> int:
+        """Bumps when the atom partition refines (new requirement seen)."""
+        return self.index.version
+
+    def classify_caps(self, caps: Dict[str, np.ndarray]) -> np.ndarray:
+        return self.index.classify(caps)
+
+    def begin_chunk(self, times: np.ndarray, atom_ids: np.ndarray) -> None:
+        """A new check-in chunk starts — baselines keep no supply state."""
+
+    def checkin(self, atom_id: int, cpu: float, mem: float, speed: float,
+                now: float) -> Optional[JobRequest]:
+        lst = self._atom_cache.get(atom_id)
+        if lst is None:
+            lst = self._atom_cache[atom_id] = self._eligible_pending(atom_id)
+        for req in lst:
+            if req.demand - req.granted > 0:
+                return req
+        return None
+
+    def _eligible_pending(self, atom_id: int) -> List[JobRequest]:
+        key = self.index.key_of(atom_id)
+        return [r for r in self.pending if r.requirement.name in key]
 
     # ---- per-scheduler ordering -------------------------------------------
 

@@ -6,10 +6,19 @@ universe into **atoms** — equivalence classes of devices by the exact subset o
 requirements they satisfy.  Every eligible set is then a union of atoms, and
 Algorithm 1's set operations (``S ∩ S_j``, ``S \\ S'_j``, ``S_j ∩ S_k``) become
 cheap frozenset algebra over atom keys.
+
+Fast path: every realized atom is **interned** to a dense int id, and the
+requirement thresholds are kept as a ``(R, C)`` min-threshold matrix so that
+classifying a whole chunk of devices is one NumPy broadcast comparison
+(``caps[:, None, :] >= mins[None, :, :]``) instead of per-device Python
+generator calls.  Frozenset keys remain the boundary representation (plans,
+supply estimation, tests); ids are what the per-check-in hot path touches.
 """
 from __future__ import annotations
 
-from typing import Dict, FrozenSet, Iterable, List, Sequence
+from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence
+
+import numpy as np
 
 from .types import Device, Requirement
 
@@ -22,6 +31,10 @@ class EligibilityIndex:
     Atoms are keyed by the frozenset of requirement names a device satisfies.
     With R distinct requirements there are at most 2^R atoms, but the device
     population only ever realizes a handful (4 in the paper's Figure 8a).
+
+    ``version`` increments whenever a requirement is added (the atom partition
+    refines); callers caching classification results must re-classify when it
+    changes.
     """
 
     def __init__(self, requirements: Sequence[Requirement]):
@@ -29,13 +42,83 @@ class EligibilityIndex:
         self._by_name: Dict[str, Requirement] = {r.name: r for r in self.requirements}
         if len(self._by_name) != len(self.requirements):
             raise ValueError("duplicate requirement names")
+        self.version: int = 0
+        # ---- interning state: dense atom id <-> frozenset key
+        self._id_by_key: Dict[AtomKey, int] = {}
+        self._key_by_id: List[AtomKey] = []
+        # ---- vectorized threshold matrix (R requirements x C capability dims)
+        self._cap_names: List[str] = []
+        self._mins: np.ndarray = np.zeros((0, 0))
+        self._rebuild_arrays()
+
+    # ------------------------------------------------------------- interning
+
+    @property
+    def num_atoms(self) -> int:
+        return len(self._key_by_id)
+
+    def intern(self, key: AtomKey) -> int:
+        """Dense id for an atom key (assigning one on first sight)."""
+        aid = self._id_by_key.get(key)
+        if aid is None:
+            aid = len(self._key_by_id)
+            self._id_by_key[key] = aid
+            self._key_by_id.append(key)
+        return aid
+
+    def key_of(self, atom_id: int) -> AtomKey:
+        return self._key_by_id[atom_id]
+
+    def id_of(self, key: AtomKey) -> Optional[int]:
+        return self._id_by_key.get(key)
 
     # ---------------------------------------------------------------- atoms
 
     def atom_of(self, device: Device) -> AtomKey:
         key = frozenset(r.name for r in self.requirements if r.matches(device))
         device.atom = key
+        device.atom_id = self.intern(key)
         return key
+
+    def atom_id_of(self, device: Device) -> int:
+        self.atom_of(device)
+        return device.atom_id  # type: ignore[return-value]
+
+    def classify(self, caps: Dict[str, np.ndarray]) -> np.ndarray:
+        """Vectorized ``atom_of`` over a struct-of-arrays device chunk.
+
+        ``caps`` maps capability name -> value array (missing capability dims
+        are treated as 0, matching ``Requirement.matches``).  Returns an int64
+        array of interned atom ids, one per device.
+        """
+        n = len(next(iter(caps.values()))) if caps else 0
+        R = len(self.requirements)
+        if R == 0 or n == 0:
+            return np.full(n, self.intern(frozenset()), dtype=np.int64)
+        mat = np.zeros((n, len(self._cap_names)))
+        for j, name in enumerate(self._cap_names):
+            arr = caps.get(name)
+            if arr is not None:
+                mat[:, j] = arr
+        sat = (mat[:, None, :] >= self._mins[None, :, :]).all(axis=2)  # (n, R)
+        names = [r.name for r in self.requirements]
+        if R <= 63:
+            # encode each satisfaction row as one int: 1D unique is far
+            # cheaper than the axis=0 structured-view path
+            codes = sat @ (np.int64(1) << np.arange(R, dtype=np.int64))
+            uniq, inverse = np.unique(codes, return_inverse=True)
+            lut = np.empty(len(uniq), dtype=np.int64)
+            for u, code in enumerate(uniq.tolist()):
+                key = frozenset(nm for b, nm in enumerate(names) if code >> b & 1)
+                lut[u] = self.intern(key)
+        else:
+            packed = np.packbits(sat, axis=1)
+            uniq, inverse = np.unique(packed, axis=0, return_inverse=True)
+            lut = np.empty(len(uniq), dtype=np.int64)
+            for u in range(len(uniq)):
+                bits = np.unpackbits(uniq[u])[:R]
+                lut[u] = self.intern(frozenset(nm for nm, b in zip(names, bits) if b))
+        return lut[inverse.ravel()]
 
     def eligible_atoms(self, requirement: Requirement, atoms: Iterable[AtomKey]) -> FrozenSet[AtomKey]:
         """Atoms whose devices satisfy ``requirement`` (atom contains req name)."""
@@ -50,9 +133,29 @@ class EligibilityIndex:
             return
         self.requirements.append(requirement)
         self._by_name[requirement.name] = requirement
+        self._rebuild_arrays()
 
     def requirement(self, name: str) -> Requirement:
         return self._by_name[name]
+
+    def _rebuild_arrays(self) -> None:
+        cap_names: List[str] = []
+        seen = set()
+        for r in self.requirements:
+            for cap, _ in r.mins:
+                if cap not in seen:
+                    seen.add(cap)
+                    cap_names.append(cap)
+        self._cap_names = cap_names
+        # -inf marks "no constraint on this dim" (a 0.0 min would wrongly
+        # reject negative capability values).
+        mins = np.full((len(self.requirements), len(cap_names)), -np.inf)
+        col = {c: j for j, c in enumerate(cap_names)}
+        for i, r in enumerate(self.requirements):
+            for cap, lo in r.mins:
+                mins[i, col[cap]] = lo
+        self._mins = mins
+        self.version += 1
 
     # ------------------------------------------------------------- analysis
 

@@ -93,8 +93,9 @@ def venn_schedule(
     # ---- greedy inter-group reallocation (lines 8-17) ----------------------
     by_abundance = sorted(active, key=lambda g: (-g.supply, g.requirement.name))
     for gj in by_abundance:
-        if gj.alloc_rate <= 0 and not gj.allocation:
-            pass  # |S'_j| may be 0; the ratio below treats it as +inf pressure
+        # |S'_j| may be 0 after initial allocation; ``_pressure`` treats a
+        # zero-rate group with pending jobs as infinite pressure, so it wins
+        # any intersected atoms from scarcer donors below.
         # candidate donors: scarcer groups with intersecting eligible sets,
         # visited from most abundant down ("take from relatively abundant
         # groups first").

@@ -1,13 +1,20 @@
 """VennScheduler — the full resource manager (Fig. 6) wiring together:
 
-* the eligibility index (atoms over requirements),
+* the eligibility index (interned atoms over requirements),
 * the 24-h windowed supply estimator (§4.4),
 * Algorithm 1 (IRS job scheduling) on every request arrival/completion,
 * Algorithm 2 (tier-based matching) for the currently served jobs,
-* the ε fairness knob (§4.4).
+* the ε fairness knob (§4.4),
+* the compiled dispatch table (the per-check-in O(1) fast path).
 
 It exposes the same simulator-facing interface as the baselines:
-``on_request`` / ``on_complete`` / ``assign`` / ``on_response``.
+``on_request`` / ``on_complete`` / ``assign`` / ``on_response``, plus the
+vectorized chunk hooks ``classify_caps`` / ``begin_chunk`` / ``checkin``:
+after every VENN-SCHED invocation the :class:`~repro.core.irs.SchedulePlan`
+is lowered into a :class:`~repro.core.dispatch.DispatchTable`, so a check-in
+is an atom-id index plus a couple of float compares.  Device check-in streams
+are fed as struct-of-arrays (``begin_chunk``) and absorbed into the supply
+estimator lazily, in batch, the next time the schedule is recomputed.
 """
 from __future__ import annotations
 
@@ -15,7 +22,10 @@ import math
 import random
 from typing import Dict, FrozenSet, List, Optional
 
+import numpy as np
+
 from .baselines import BaseScheduler
+from .dispatch import DispatchTable, MISS, compile_plan
 from .eligibility import EligibilityIndex
 from .fairness import FairnessPolicy
 from .irs import SchedulePlan, venn_schedule
@@ -33,7 +43,6 @@ class VennScheduler(BaseScheduler):
                  supply_window: float = 24 * 3600.0, enable_matching: bool = True,
                  enable_irs: bool = True):
         super().__init__(seed)
-        self.index = EligibilityIndex([])
         self.supply = SupplyEstimator(window=supply_window)
         self.matcher = TierMatcher(num_tiers=num_tiers, rng=random.Random(seed + 1))
         self.fairness = FairnessPolicy(epsilon=epsilon)
@@ -42,9 +51,21 @@ class VennScheduler(BaseScheduler):
         self.groups: Dict[str, JobGroup] = {}
         self.profiles: Dict[int, JobProfile] = {}
         self.plan: SchedulePlan = SchedulePlan()
+        self.dispatch: DispatchTable = DispatchTable()
         self.tier_decisions: Dict[int, TierDecision] = {}   # request id()->decision
         self._tier_decided: Dict[int, tuple] = {}           # job_id -> (round, attempt)
         self.sched_invocations = 0
+        # request arrival/completion marks the plan dirty; the replan runs
+        # lazily at the next check-in (a completion that immediately submits
+        # the next round therefore costs one replan, not two -- the plan in
+        # between is never consulted)
+        self._plan_dirty = True
+        # index atom id -> supply atom id (the estimator interns its own keys)
+        self._supply_lut = np.zeros(0, dtype=np.int64)
+        # pending chunk feed (struct-of-arrays), absorbed lazily at replans
+        self._feed_times: Optional[np.ndarray] = None
+        self._feed_ids: Optional[np.ndarray] = None
+        self._feed_pos = 0
 
     # ------------------------------------------------------------ sim hooks
 
@@ -57,7 +78,7 @@ class VennScheduler(BaseScheduler):
         if request.job not in g.jobs:
             g.jobs.append(request.job)
         self.pending.append(request)
-        self._reschedule(now)
+        self._plan_dirty = True
 
     def on_complete(self, request: JobRequest, now: float) -> None:
         if request in self.pending:
@@ -66,40 +87,91 @@ class VennScheduler(BaseScheduler):
         g = self.groups.get(request.requirement.name)
         if g and request.job.remaining_rounds == 0 and request.job in g.jobs:
             g.jobs.remove(request.job)
-        self._reschedule(now)
+        self._plan_dirty = True
 
     def on_response(self, request: JobRequest, device: Device,
                     response_time: float, ok: bool, now: float) -> None:
         if ok:
-            prof = self.profiles.setdefault(request.job.job_id, JobProfile())
+            prof = self.profiles.get(request.job.job_id)
+            if prof is None:
+                prof = self.profiles[request.job.job_id] = JobProfile()
             prof.record(device.speed, response_time)
 
+    # ------------------------------------------------------------- fast path
+
+    def begin_chunk(self, times: np.ndarray, atom_ids: np.ndarray) -> None:
+        """Feed a pre-classified struct-of-arrays check-in chunk.
+
+        The arrays are held by reference (the simulator may re-classify the
+        unprocessed tail in place when the requirement set grows) and absorbed
+        into the supply estimator in batch at the next replan."""
+        # a new chunk only starts once the previous one is fully in the sim's
+        # past; absorb whatever of it the last replan didn't reach
+        self._absorb_feed(math.inf)
+        self._feed_times = times
+        self._feed_ids = atom_ids
+        self._feed_pos = 0
+
+    def checkin(self, atom_id: int, cpu: float, mem: float, speed: float,
+                now: float) -> Optional[JobRequest]:
+        """O(1) device check-in: dispatch-table index + tier band compare.
+
+        The slot scan mirrors ``DispatchTable.assign`` inline — this is the
+        hottest call in the system and the extra frame is measurable."""
+        if self._plan_dirty:
+            self._reschedule(now)
+        by_atom = self.dispatch._slots
+        slots = by_atom[atom_id] if atom_id < len(by_atom) else None
+        if slots is None:
+            # unseen atom (no plan yet covers it): replan once; the rebuilt
+            # table covers every interned atom, so idle periods never replan
+            # per check-in.
+            self._reschedule(now)
+            req = self.dispatch.assign(atom_id, speed)
+            return None if req is MISS else req
+        found = None
+        dead = False
+        for slot in slots:
+            req = slot[0]
+            if req.demand > req.granted:
+                if slot[1] <= speed < slot[2]:
+                    found = req
+                    break
+            else:
+                dead = True     # filled since compile
+        if dead:                # amortized invalidation: drop filled slots
+            slots[:] = [s for s in slots if s[0].demand > s[0].granted]
+        return found
+
     def assign(self, device: Device, now: float) -> Optional[JobRequest]:
+        """Scalar compatibility path (classify + record + fast dispatch)."""
         atom = self.index.atom_of(device)
         self.supply.record(atom, now)
-        order = self.plan.atom_priority.get(atom)
-        if order is None:
-            # unseen atom (no plan yet covers it): replan once, then cache an
-            # empty priority so idle periods don't replan per check-in.
-            self._reschedule(now)
-            order = self.plan.atom_priority.setdefault(atom, [])
-        for group in order:
-            jobs = self.plan.job_order.get(group.requirement.name, [])
-            for pos, job in enumerate(jobs):
-                req = job.current
-                if req is None or req.remaining <= 0:
-                    continue
-                decision = self.tier_decisions.get(id(req))
-                if pos == 0 and decision is not None and not decision.accepts(device):
-                    # leftover tiers flow to subsequent jobs in the group
-                    continue
-                return req
-        return None
+        return self.checkin(device.atom_id, 0.0, 0.0, device.speed, now)
+
+    def _absorb_feed(self, now: float) -> None:
+        """Batch-record fed check-ins with time <= now into the estimator."""
+        if self._feed_times is None or self._feed_pos >= len(self._feed_times):
+            return
+        hi = int(np.searchsorted(self._feed_times, now, side="right"))
+        if hi <= self._feed_pos:
+            return
+        sl = slice(self._feed_pos, hi)
+        ids = self._feed_ids[sl]
+        if self.index.num_atoms > len(self._supply_lut):
+            lut = np.empty(self.index.num_atoms, dtype=np.int64)
+            for aid in range(self.index.num_atoms):
+                lut[aid] = self.supply.intern(self.index.key_of(aid))
+            self._supply_lut = lut
+        self.supply.record_batch(self._supply_lut[ids], self._feed_times[sl])
+        self._feed_pos = hi
 
     # ------------------------------------------------------------- Alg 1+2
 
     def _reschedule(self, now: float) -> None:
         self.sched_invocations += 1
+        self._plan_dirty = False
+        self._absorb_feed(now)
         self.supply.advance(now)
         atoms = set(self.supply.known_atoms())
         # make sure every group's requirement defines atoms even pre-traffic
@@ -113,9 +185,19 @@ class VennScheduler(BaseScheduler):
         num_jobs = sum(len(g.pending_jobs()) for g in active_groups)
         solo = lambda j: self._solo_jct(j)
         if self.enable_irs:
+            # queue lengths are fixed within one VENN-SCHED run; cache them
+            # (the greedy reallocation queries them per donor pair)
+            qcache: Dict[int, float] = {}
+
+            def queue_len(g: JobGroup) -> float:
+                v = qcache.get(id(g))
+                if v is None:
+                    v = qcache[id(g)] = self.fairness.queue_len(g, num_jobs, solo)
+                return v
+
             self.plan = venn_schedule(
                 active_groups,
-                queue_len=lambda g: self.fairness.queue_len(g, num_jobs, solo),
+                queue_len=queue_len,
                 demand_key=lambda j: self.fairness.demand_key(j, num_jobs, solo),
             )
         else:  # ablation "Venn w/o scheduling": FIFO order, matching only
@@ -129,6 +211,9 @@ class VennScheduler(BaseScheduler):
             self._decide_tiers(now)
         else:
             self.tier_decisions.clear()
+
+        self.dispatch = compile_plan(self.plan, self.index.intern,
+                                     self.index.num_atoms, self.tier_decisions)
 
     def _decide_tiers(self, now: float) -> None:
         kept: Dict[int, TierDecision] = {}
@@ -144,7 +229,7 @@ class VennScheduler(BaseScheduler):
                 if prev is not None:            # decision is per-request
                     kept[id(req)] = prev
                 continue
-            prof = self.profiles.setdefault(job.job_id, JobProfile())
+            prof = self._profile(job.job_id)
             group = self.groups[job.requirement.name]
             rate = group.alloc_rate
             t_sched = req.remaining / rate if rate > 0 else float("inf")
@@ -157,6 +242,12 @@ class VennScheduler(BaseScheduler):
 
     # ------------------------------------------------------------ estimates
 
+    def _profile(self, job_id: int) -> JobProfile:
+        prof = self.profiles.get(job_id)
+        if prof is None:
+            prof = self.profiles[job_id] = JobProfile()
+        return prof
+
     def _response_estimate(self, job: Job, prof: JobProfile) -> float:
         if prof.n >= 8:
             rts = prof.sorted_rts()
@@ -167,7 +258,7 @@ class VennScheduler(BaseScheduler):
     def _solo_jct(self, job: Job) -> float:
         g = self.groups.get(job.requirement.name)
         rate = g.supply if g and g.supply > 0 else self.supply.prior_rate
-        prof = self.profiles.setdefault(job.job_id, JobProfile())
+        prof = self._profile(job.job_id)
         per_round = job.demand_per_round / rate + self._response_estimate(job, prof)
         return max(job.remaining_rounds, 1) * per_round
 

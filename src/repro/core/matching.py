@@ -18,59 +18,88 @@ from __future__ import annotations
 
 import math
 import random
-from collections import deque
-from dataclasses import dataclass, field
-from typing import Deque, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from .types import Device, Job
 
 
 def _percentile(sorted_vals: Sequence[float], q: float) -> float:
-    if not sorted_vals:
+    if len(sorted_vals) == 0:
         return float("nan")
     idx = min(len(sorted_vals) - 1, max(0, int(math.ceil(q * len(sorted_vals))) - 1))
-    return sorted_vals[idx]
+    return float(sorted_vals[idx])
 
 
-@dataclass
 class JobProfile:
     """Per-job response history: (device speed, response time) samples from
     participants of earlier rounds, used to set tier thresholds adaptively.
-    Sorted views are cached (the scheduler hot path re-reads them often)."""
 
-    max_samples: int = 2048
-    samples: Deque[Tuple[float, float]] = field(default_factory=lambda: deque(maxlen=2048))
-    _dirty: bool = True
-    _sorted_speeds: Tuple[float, ...] = ()
-    _sorted_rts: Tuple[float, ...] = ()
-    _pairs_by_speed: Tuple[Tuple[float, float], ...] = ()
+    Records are O(1) list appends (truncated to the trailing ``max_samples``
+    window lazily) and sorted views are cached as NumPy arrays — the
+    scheduler re-reads them on every replan, so refresh cost is one
+    vectorized sort."""
+
+    __slots__ = ("max_samples", "_speeds_l", "_rts_l",
+                 "_dirty", "_sorted_speeds", "_sorted_rts", "_rts_by_speed")
+
+    def __init__(self, max_samples: int = 2048):
+        self.max_samples = max_samples
+        self._speeds_l: List[float] = []
+        self._rts_l: List[float] = []
+        self._dirty = True
+        self._sorted_speeds = np.zeros(0)
+        self._sorted_rts = np.zeros(0)
+        self._rts_by_speed = np.zeros(0)
 
     def record(self, speed: float, response_time: float) -> None:
-        self.samples.append((speed, response_time))
+        self._speeds_l.append(speed)
+        self._rts_l.append(response_time)
         self._dirty = True
+        if len(self._rts_l) >= 2 * self.max_samples:
+            self._truncate()
+
+    def _truncate(self) -> None:
+        m = self.max_samples
+        if len(self._rts_l) > m:
+            del self._speeds_l[:-m]
+            del self._rts_l[:-m]
+
+    @property
+    def samples(self) -> List[Tuple[float, float]]:
+        """(speed, response_time) pairs, oldest first (compatibility view)."""
+        m = self.max_samples
+        return list(zip(self._speeds_l[-m:], self._rts_l[-m:]))
 
     def _refresh(self) -> None:
         if self._dirty:
-            self._pairs_by_speed = tuple(sorted(self.samples))
-            self._sorted_speeds = tuple(s for s, _ in self._pairs_by_speed)
-            self._sorted_rts = tuple(sorted(rt for _, rt in self.samples))
+            self._truncate()
+            speeds = np.asarray(self._speeds_l)
+            rts = np.asarray(self._rts_l)
+            order = np.argsort(speeds)
+            self._sorted_speeds = speeds[order]
+            self._rts_by_speed = rts[order]
+            self._sorted_rts = np.sort(rts)
             self._dirty = False
 
-    def sorted_speeds(self) -> Tuple[float, ...]:
+    def sorted_speeds(self) -> np.ndarray:
         self._refresh()
         return self._sorted_speeds
 
-    def sorted_rts(self) -> Tuple[float, ...]:
+    def sorted_rts(self) -> np.ndarray:
         self._refresh()
         return self._sorted_rts
 
-    def pairs_by_speed(self) -> Tuple[Tuple[float, float], ...]:
+    def rts_by_speed(self) -> np.ndarray:
+        """Response times ordered by the corresponding device speed."""
         self._refresh()
-        return self._pairs_by_speed
+        return self._rts_by_speed
 
     @property
     def n(self) -> int:
-        return len(self.samples)
+        return min(len(self._rts_l), self.max_samples)
 
 
 @dataclass
@@ -133,20 +162,18 @@ class TierMatcher:
         n = len(speeds)
         lo_i = (u * n) // self.v
         hi_i = ((u + 1) * n) // self.v
-        lo = 0.0 if u == 0 else speeds[lo_i]
-        hi = float("inf") if u == self.v - 1 else speeds[min(hi_i, n - 1)]
+        lo = 0.0 if u == 0 else float(speeds[lo_i])
+        hi = float("inf") if u == self.v - 1 else float(speeds[min(hi_i, n - 1)])
         return lo, hi
 
     def _tier_speedup(self, profile: JobProfile, lo: float, hi: float) -> float:
         """g_v = t^v / t^0 on the p95 tail of observed response times."""
-        import bisect
-        pairs = profile.pairs_by_speed()
         speeds = profile.sorted_speeds()
-        i0 = bisect.bisect_left(speeds, lo)
-        i1 = bisect.bisect_left(speeds, hi)
-        tier_rt = sorted(rt for _, rt in pairs[i0:i1])
+        i0 = int(np.searchsorted(speeds, lo, side="left"))
+        i1 = int(np.searchsorted(speeds, hi, side="left"))
+        tier_rt = np.sort(profile.rts_by_speed()[i0:i1])
         t0 = _percentile(profile.sorted_rts(), self.tail_q)
-        if not tier_rt or not math.isfinite(t0) or t0 <= 0:
+        if len(tier_rt) == 0 or not math.isfinite(t0) or t0 <= 0:
             return 1.0
         tv = _percentile(tier_rt, self.tail_q)
         return tv / t0

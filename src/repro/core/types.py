@@ -25,15 +25,21 @@ from typing import Callable, Dict, FrozenSet, List, Optional, Tuple
 _device_ids = itertools.count()
 
 
-@dataclass
+@dataclass(slots=True)
 class Device:
-    """An ephemeral edge device that has just checked in."""
+    """An ephemeral edge device that has just checked in.
+
+    On the vectorized fast path devices live as struct-of-arrays chunks and a
+    ``Device`` object is only materialized for *granted* check-ins; ``atom``
+    (frozenset key) and ``atom_id`` (dense interned id) are filled in by the
+    eligibility index."""
 
     caps: Dict[str, float]              # e.g. {"cpu": 4.0, "mem": 6.0} (GHz, GB)
     speed: float = 1.0                  # relative task-execution speed (1.0 = ref)
     checkin_time: float = 0.0
-    dev_id: int = field(default_factory=lambda: next(_device_ids))
+    dev_id: int = field(default_factory=_device_ids.__next__)
     atom: Optional[FrozenSet[str]] = None   # filled in by the eligibility index
+    atom_id: Optional[int] = None           # dense interned id of ``atom``
 
     def __hash__(self) -> int:
         return self.dev_id
@@ -93,6 +99,7 @@ class JobRequest:
     granted: int = 0                   # devices handed out so far
     responses: int = 0                 # successful responses received
     failures: int = 0
+    quorum: int = 0                    # responses needed (simulator fills in)
     alloc_complete_time: Optional[float] = None
     complete_time: Optional[float] = None
     aborted: int = 0                   # times this round has been aborted/retried

@@ -1,12 +1,13 @@
 """Event-driven simulation of multi-job collaborative learning (§5.1 testbed)."""
-from .devices import (DeviceGenerator, PopulationConfig, REQ_COMPUTE,
-                      REQ_GENERAL, REQ_HIGHPERF, REQ_MEMORY, REQUIREMENT_CLASSES)
+from .devices import (DeviceChunk, DeviceGenerator, PopulationConfig,
+                      REQ_COMPUTE, REQ_GENERAL, REQ_HIGHPERF, REQ_MEMORY,
+                      REQUIREMENT_CLASSES)
 from .metrics import RoundRecord, SimMetrics
 from .simulator import SimConfig, Simulator, run_workload
 from .traces import BIASED, JobTraceConfig, WORKLOADS, generate_jobs, workload_variants
 
 __all__ = [
-    "BIASED", "DeviceGenerator", "JobTraceConfig", "PopulationConfig",
+    "BIASED", "DeviceChunk", "DeviceGenerator", "JobTraceConfig", "PopulationConfig",
     "REQ_COMPUTE", "REQ_GENERAL", "REQ_HIGHPERF", "REQ_MEMORY",
     "REQUIREMENT_CLASSES", "RoundRecord", "SimConfig", "SimMetrics",
     "Simulator", "WORKLOADS", "generate_jobs", "run_workload", "workload_variants",

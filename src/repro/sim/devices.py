@@ -15,6 +15,12 @@ qualitative structure:
 
 Each device executes at most one task per check-in (the paper limits one job
 per device-day) and then leaves the pool.
+
+Fast path: :meth:`DeviceGenerator.sample_chunk` emits whole check-in chunks as
+struct-of-arrays (:class:`DeviceChunk`) — times, capabilities, speeds, plus
+pre-sampled response-time and failure draws — so the simulator touches NumPy
+arrays per check-in and materializes a :class:`~repro.core.types.Device`
+object only for granted devices.
 """
 from __future__ import annotations
 
@@ -38,6 +44,22 @@ REQUIREMENT_CLASSES: Tuple[Requirement, ...] = (
 )
 
 
+def response_time_from(speed: float, z: float, task_time_mean: float,
+                       sigma: float) -> float:
+    """Log-normal response time from a pre-sampled standard normal ``z``.
+    Single source of truth for the response-time model: used by both
+    ``DeviceGenerator.response_time`` and the simulator's inlined grant
+    path (on the chunk's pre-sampled draws)."""
+    return task_time_mean / (speed if speed > 1e-3 else 1e-3) * math.exp(sigma * z)
+
+
+def fails_from(speed: float, u: float, fail_base: float,
+               fail_slow_boost: float) -> bool:
+    """Failure draw from a pre-sampled uniform ``u`` (slow devices fail
+    more, §4.3).  Shared by ``DeviceGenerator.fails`` and the simulator."""
+    return u < fail_base + fail_slow_boost / (1.0 + speed)
+
+
 @dataclass
 class PopulationConfig:
     base_rate: float = 2.0          # mean device check-ins per second
@@ -55,6 +77,28 @@ class PopulationConfig:
     seed: int = 0
 
 
+@dataclass
+class DeviceChunk:
+    """Struct-of-arrays check-in chunk: one row per device, time-sorted.
+
+    ``resp_z`` / ``fail_u`` are pre-sampled randomness (a standard normal for
+    the log-normal response time, a uniform for the failure draw) so granting
+    a device needs no RNG calls on the hot path.  ``atom_ids`` is filled in by
+    the simulator once the scheduler classifies the chunk."""
+
+    times: np.ndarray
+    cpu: np.ndarray
+    mem: np.ndarray
+    speed: np.ndarray
+    resp_z: np.ndarray
+    fail_u: np.ndarray
+    atom_ids: np.ndarray = None  # type: ignore[assignment]
+
+    @property
+    def n(self) -> int:
+        return len(self.times)
+
+
 class DeviceGenerator:
     """Vectorized generator of (time, Device) check-ins."""
 
@@ -69,6 +113,11 @@ class DeviceGenerator:
         return c.base_rate * (1.0 + c.diurnal_amplitude *
                               math.sin(2 * math.pi * (t - c.diurnal_phase) / DAY))
 
+    def rate_array(self, ts: np.ndarray) -> np.ndarray:
+        c = self.cfg
+        return c.base_rate * (1.0 + c.diurnal_amplitude *
+                              np.sin(2 * np.pi * (ts - c.diurnal_phase) / DAY))
+
     def _max_rate(self) -> float:
         return self.cfg.base_rate * (1.0 + self.cfg.diurnal_amplitude)
 
@@ -79,7 +128,7 @@ class DeviceGenerator:
         lam = self._max_rate()
         n = self.rng.poisson(lam * (t1 - t0))
         ts = np.sort(self.rng.uniform(t0, t1, size=n))
-        keep = self.rng.uniform(0, lam, size=n) < np.array([self.rate(t) for t in ts])
+        keep = self.rng.uniform(0, lam, size=n) < self.rate_array(ts)
         return ts[keep]
 
     def sample_devices(self, times: np.ndarray) -> List[Device]:
@@ -97,6 +146,26 @@ class DeviceGenerator:
             for i in range(n)
         ]
 
+    def sample_chunk(self, t0: float, t1: float) -> DeviceChunk:
+        """Sample one struct-of-arrays check-in chunk for ``[t0, t1)``.
+
+        Uses the same draws (in the same order) as ``checkin_times`` +
+        ``sample_devices`` for the population arrays, then pre-samples the
+        response-time normals and failure uniforms vectorized."""
+        times = self.checkin_times(t0, t1)
+        c, n = self.cfg, len(times)
+        z = self.rng.standard_normal((n, 2))
+        z1 = z[:, 0]
+        z2 = c.cap_corr * z[:, 0] + math.sqrt(1 - c.cap_corr ** 2) * z[:, 1]
+        cpu = c.cpu_med * np.exp(c.cpu_sigma * z1)
+        mem = c.mem_med * np.exp(c.mem_sigma * z2)
+        speed = (cpu / c.cpu_med) ** c.speed_exponent * np.exp(
+            c.speed_noise_sigma * self.rng.standard_normal(n))
+        resp_z = self.rng.standard_normal(n)
+        fail_u = self.rng.uniform(size=n)
+        return DeviceChunk(times=times, cpu=cpu, mem=mem, speed=speed,
+                           resp_z=resp_z, fail_u=fail_u)
+
     def stream(self, horizon: float, chunk: float = 6 * 3600.0
                ) -> Iterator[Device]:
         t = 0.0
@@ -111,9 +180,11 @@ class DeviceGenerator:
     def response_time(self, device: Device, task_time_mean: float,
                       sigma: float) -> float:
         """Log-normal response time scaled by the device's speed."""
-        mu = math.log(task_time_mean / max(device.speed, 1e-3))
-        return float(np.exp(mu + sigma * self.rng.standard_normal()))
+        return response_time_from(device.speed,
+                                  float(self.rng.standard_normal()),
+                                  task_time_mean, sigma)
 
     def fails(self, device: Device) -> bool:
-        p = self.cfg.fail_base + self.cfg.fail_slow_boost / (1.0 + device.speed)
-        return bool(self.rng.uniform() < p)
+        return fails_from(device.speed, float(self.rng.uniform()),
+                          self.cfg.fail_base, self.cfg.fail_slow_boost)
+

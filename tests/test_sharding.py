@@ -1,9 +1,14 @@
 """Sharding rules: divisibility-aware greedy assignment invariants."""
 import jax
 import jax.numpy as jnp
+import importlib.util
+
 import pytest
 
 from repro.configs import ARCHS, get_config
+if importlib.util.find_spec("repro.dist") is None:   # skip only on absence;
+    pytest.skip("repro.dist not implemented yet",     # real import bugs fail
+                allow_module_level=True)
 from repro.dist.sharding import (DEFAULT_RULES, LONG_CONTEXT_RULES,
                                  spec_partition)
 from repro.models.common import ParamSpec, is_spec

@@ -21,8 +21,11 @@ import os
 import time
 from pathlib import Path
 
+import tempfile
+
 from .common import FAST, emit
 from repro.core import SCHEDULERS
+from repro.scenarios import fast_scaled, get_scenario, run_one
 from repro.sim import JobTraceConfig, PopulationConfig, SimConfig, generate_jobs
 from repro.sim.simulator import Simulator
 
@@ -59,6 +62,35 @@ def run_scenario(base_rate: float, num_jobs: int, days: int, seed: int = 1):
     }
 
 
+def _scenario_replay_row():
+    """Scenario-engine timing: record one flash_crowd run, time its replay.
+
+    Tracks the trace-replay path (streamed CSV ingest feeding the simulator)
+    alongside the synthetic-generator numbers above."""
+    spec = get_scenario("flash_crowd")
+    if FAST:
+        spec = fast_scaled(spec)
+    with tempfile.NamedTemporaryFile(suffix=".csv", delete=False) as f:
+        trace = f.name
+    try:
+        rec = run_one(spec, "venn", seed=0, record=trace)
+        rep = run_one(spec, "venn", seed=0, replay=trace)
+        assert rec.metrics.jcts == rep.metrics.jcts, \
+            "replay must be bit-identical to the recorded run"
+        row = {
+            "record_wall_s": rec.wall,
+            "replay_wall_s": rep.wall,
+            "avg_jct_s": rep.metrics.avg_jct,
+            "trace_bytes": os.path.getsize(trace),
+        }
+        emit("hotpath_scenario_replay", rep.wall * 1e6,
+             f"record={rec.wall:.2f}s replay={rep.wall:.2f}s "
+             f"bit_identical=True")
+        return row
+    finally:
+        os.unlink(trace)
+
+
 def main():
     results = {}
     for label, base_rate, num_jobs, days, reps in SCENARIOS:
@@ -89,6 +121,8 @@ def main():
         results["heavy_under_60s"] = heavy["wall_s"] < 60.0
         emit("hotpath_heavy_validates", 0,
              f"under_60s={heavy['wall_s'] < 60.0}")
+
+    results["scenario_replay_flash_crowd"] = _scenario_replay_row()
 
     out = Path(os.environ.get("REPRO_BENCH_OUT",
                               Path(__file__).resolve().parent.parent))

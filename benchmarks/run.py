@@ -7,12 +7,14 @@ import sys
 import time
 import traceback
 
-from . import (bench_hotpath, bench_kernels, fig10_overhead, fig11_breakdown,
-               fig12_numjobs, fig13_tiers, fig14_fairness, table1_workloads,
-               table2_demand_percentiles, table3_resource_types, table4_biased)
+from . import (bench_hotpath, bench_kernels, bench_scenarios, fig10_overhead,
+               fig11_breakdown, fig12_numjobs, fig13_tiers, fig14_fairness,
+               table1_workloads, table2_demand_percentiles,
+               table3_resource_types, table4_biased)
 
 ALL = [
     ("hotpath", bench_hotpath.main),
+    ("scenarios", bench_scenarios.main),
     ("table1", table1_workloads.main),
     ("table2", table2_demand_percentiles.main),
     ("table3", table3_resource_types.main),

@@ -89,6 +89,15 @@ class BaseScheduler:
     def begin_chunk(self, times: np.ndarray, atom_ids: np.ndarray) -> None:
         """A new check-in chunk starts — baselines keep no supply state."""
 
+    def live_atoms(self) -> Optional[List[bool]]:
+        """Optional per-atom-id liveness list for the simulator's dead-atom
+        skip: ``live[aid] is False`` guarantees ``checkin(aid, ...)`` would
+        return None, so the drain loop may skip the call outright.  ``None``
+        means no liveness information (treat every atom as live).  The list
+        must stay current in place across replans triggered inside
+        ``checkin`` (the simulator caches the object per drain segment)."""
+        return None
+
     def checkin(self, atom_id: int, cpu: float, mem: float, speed: float,
                 now: float) -> Optional[JobRequest]:
         lst = self._atom_cache.get(atom_id)

@@ -45,6 +45,13 @@ class DispatchTable:
         # None = atom id unknown to this plan (MISS); [] = known but idle.
         self._slots: List[Optional[List[list]]] = [None] * num_atoms
 
+    def live_list(self) -> List[bool]:
+        """Per-atom-id liveness: ``False`` iff this plan knows the atom and has
+        no candidate slot for it (a dead atom — check-ins can be skipped
+        without consulting the scheduler).  Uncovered atoms (``None``) are
+        *live*: they must reach the scheduler to trigger the lazy replan."""
+        return [s is None or len(s) > 0 for s in self._slots]
+
     def assign(self, atom_id: int, speed: float):
         """Return the first live candidate request accepting ``speed``,
         ``None`` if no candidate wants the device, or :data:`MISS` if the atom

@@ -20,6 +20,7 @@ from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence
 
 import numpy as np
 
+from .interning import AtomInterner
 from .types import Device, Requirement
 
 AtomKey = FrozenSet[str]
@@ -37,15 +38,17 @@ class EligibilityIndex:
     changes.
     """
 
-    def __init__(self, requirements: Sequence[Requirement]):
+    def __init__(self, requirements: Sequence[Requirement],
+                 interner: Optional[AtomInterner] = None):
         self.requirements: List[Requirement] = list(requirements)
         self._by_name: Dict[str, Requirement] = {r.name: r for r in self.requirements}
         if len(self._by_name) != len(self.requirements):
             raise ValueError("duplicate requirement names")
         self.version: int = 0
-        # ---- interning state: dense atom id <-> frozenset key
-        self._id_by_key: Dict[AtomKey, int] = {}
-        self._key_by_id: List[AtomKey] = []
+        # ---- interning state: shared dense atom id <-> frozenset key map
+        # (the same interner backs the supply estimator, so index ids are
+        # valid everywhere — no translation LUTs)
+        self.interner = interner if interner is not None else AtomInterner()
         # ---- vectorized threshold matrix (R requirements x C capability dims)
         self._cap_names: List[str] = []
         self._mins: np.ndarray = np.zeros((0, 0))
@@ -55,22 +58,17 @@ class EligibilityIndex:
 
     @property
     def num_atoms(self) -> int:
-        return len(self._key_by_id)
+        return len(self.interner)
 
     def intern(self, key: AtomKey) -> int:
         """Dense id for an atom key (assigning one on first sight)."""
-        aid = self._id_by_key.get(key)
-        if aid is None:
-            aid = len(self._key_by_id)
-            self._id_by_key[key] = aid
-            self._key_by_id.append(key)
-        return aid
+        return self.interner.intern(key)
 
     def key_of(self, atom_id: int) -> AtomKey:
-        return self._key_by_id[atom_id]
+        return self.interner.key_of(atom_id)
 
     def id_of(self, key: AtomKey) -> Optional[int]:
-        return self._id_by_key.get(key)
+        return self.interner.id_of(key)
 
     # ---------------------------------------------------------------- atoms
 

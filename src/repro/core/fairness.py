@@ -50,8 +50,13 @@ class FairnessPolicy:
     # ----------------------------------------------------------- intra-group
 
     def demand_key(self, job: Job, num_jobs: int, solo_jct: SoloJctFn) -> float:
-        """d'_i — effective remaining demand used for intra-group ordering."""
-        d = float(job.remaining_demand)
+        """d'_i — effective remaining demand used for intra-group ordering.
+
+        Tenant priority divides the key: a priority-p job is ordered as if its
+        remaining demand were d/p, so higher tiers are served earlier within
+        their group (neutral at the default p = 1.0).  Applied before the ε
+        usage bias so fairness still moderates across priorities."""
+        d = float(job.remaining_demand) / max(job.priority, 1e-9)
         if not self.enabled():
             return d
         t_fair = max(num_jobs, 1) * max(solo_jct(job), 1e-9)

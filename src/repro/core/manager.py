@@ -43,7 +43,10 @@ class VennScheduler(BaseScheduler):
                  supply_window: float = 24 * 3600.0, enable_matching: bool = True,
                  enable_irs: bool = True):
         super().__init__(seed)
-        self.supply = SupplyEstimator(window=supply_window)
+        # one shared atom-id space: classification ids feed the estimator
+        # directly (no index->supply translation table)
+        self.supply = SupplyEstimator(window=supply_window,
+                                      interner=self.index.interner)
         self.matcher = TierMatcher(num_tiers=num_tiers, rng=random.Random(seed + 1))
         self.fairness = FairnessPolicy(epsilon=epsilon)
         self.enable_matching = enable_matching
@@ -52,6 +55,10 @@ class VennScheduler(BaseScheduler):
         self.profiles: Dict[int, JobProfile] = {}
         self.plan: SchedulePlan = SchedulePlan()
         self.dispatch: DispatchTable = DispatchTable()
+        # per-atom-id liveness, mutated IN PLACE at every replan so the
+        # simulator's per-segment reference stays current even across the
+        # lazy unseen-atom replans that happen mid-drain
+        self._live: List[bool] = []
         self.tier_decisions: Dict[int, TierDecision] = {}   # request id()->decision
         self._tier_decided: Dict[int, tuple] = {}           # job_id -> (round, attempt)
         self.sched_invocations = 0
@@ -60,8 +67,6 @@ class VennScheduler(BaseScheduler):
         # the next round therefore costs one replan, not two -- the plan in
         # between is never consulted)
         self._plan_dirty = True
-        # index atom id -> supply atom id (the estimator interns its own keys)
-        self._supply_lut = np.zeros(0, dtype=np.int64)
         # pending chunk feed (struct-of-arrays), absorbed lazily at replans
         self._feed_times: Optional[np.ndarray] = None
         self._feed_ids: Optional[np.ndarray] = None
@@ -141,7 +146,15 @@ class VennScheduler(BaseScheduler):
                 dead = True     # filled since compile
         if dead:                # amortized invalidation: drop filled slots
             slots[:] = [s for s in slots if s[0].demand > s[0].granted]
+            if not slots:       # atom went dead: let the drain loop skip it
+                self._live[atom_id] = False
         return found
+
+    def live_atoms(self) -> Optional[List[bool]]:
+        """Dead-atom bitmap for the drain loop; None while the plan is dirty
+        (stale liveness must not suppress check-ins that a replan would
+        serve)."""
+        return None if self._plan_dirty else self._live
 
     def assign(self, device: Device, now: float) -> Optional[JobRequest]:
         """Scalar compatibility path (classify + record + fast dispatch)."""
@@ -157,13 +170,8 @@ class VennScheduler(BaseScheduler):
         if hi <= self._feed_pos:
             return
         sl = slice(self._feed_pos, hi)
-        ids = self._feed_ids[sl]
-        if self.index.num_atoms > len(self._supply_lut):
-            lut = np.empty(self.index.num_atoms, dtype=np.int64)
-            for aid in range(self.index.num_atoms):
-                lut[aid] = self.supply.intern(self.index.key_of(aid))
-            self._supply_lut = lut
-        self.supply.record_batch(self._supply_lut[ids], self._feed_times[sl])
+        # classification ids are supply ids (shared interner): feed directly
+        self.supply.record_batch(self._feed_ids[sl], self._feed_times[sl])
         self._feed_pos = hi
 
     # ------------------------------------------------------------- Alg 1+2
@@ -214,6 +222,7 @@ class VennScheduler(BaseScheduler):
 
         self.dispatch = compile_plan(self.plan, self.index.intern,
                                      self.index.num_atoms, self.tier_decisions)
+        self._live[:] = self.dispatch.live_list()
 
     def _decide_tiers(self, now: float) -> None:
         kept: Dict[int, TierDecision] = {}

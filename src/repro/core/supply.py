@@ -14,6 +14,12 @@ The estimator still speaks frozenset atom keys at the boundary (``record`` /
 ``rate`` / ``known_atoms``); :meth:`record_batch` is the vectorized entry the
 scheduler's chunk feed uses.
 
+Atom ids come from a shared :class:`~repro.core.interning.AtomInterner`
+(pass the eligibility index's interner to share one id space — the manager
+does, so classification ids feed ``record_batch`` directly with no LUT).
+Per-atom ring storage grows lazily, so ids interned by other consumers cost
+nothing until this estimator sees traffic for them.
+
 Span anchoring: ``_t0`` is the time of the *first recorded event* (not 0.0),
 so estimators whose first observation arrives late do not divide by an
 inflated span.
@@ -24,6 +30,8 @@ import math
 from typing import Dict, FrozenSet, Iterable, List, Optional, Tuple
 
 import numpy as np
+
+from .interning import AtomInterner
 
 AtomKey = FrozenSet[str]
 
@@ -39,13 +47,13 @@ class SupplyEstimator:
     """
 
     def __init__(self, window: float = DAY, prior_rate: float = 0.1,
-                 bucket: float = 60.0):
+                 bucket: float = 60.0, interner: Optional[AtomInterner] = None):
         self.window = float(window)
         self.prior_rate = float(prior_rate)
         self.bucket = float(bucket)
         self._nb = int(math.ceil(self.window / self.bucket)) + 1
-        self._id_by_key: Dict[AtomKey, int] = {}
-        self._key_by_id: List[AtomKey] = []
+        # not `interner or ...`: an empty interner is falsy via __len__
+        self.interner = interner if interner is not None else AtomInterner()
         self._counts: List[np.ndarray] = []     # per atom: (nb,) ring of bucket counts
         self._totals: List[int] = []            # per atom: Σ counts inside the window
         self._next_evict: List[int] = []        # per atom: first absolute bucket not yet evicted
@@ -55,15 +63,17 @@ class SupplyEstimator:
     # ------------------------------------------------------------- interning
 
     def intern(self, key: AtomKey) -> int:
-        aid = self._id_by_key.get(key)
-        if aid is None:
-            aid = len(self._key_by_id)
-            self._id_by_key[key] = aid
-            self._key_by_id.append(key)
+        aid = self.interner.intern(key)
+        self._ensure(aid)
+        return aid
+
+    def _ensure(self, aid: int) -> None:
+        """Grow per-atom ring storage to cover ids up to ``aid`` (ids are
+        assigned by the shared interner, possibly by other consumers)."""
+        while len(self._counts) <= aid:
             self._counts.append(np.zeros(self._nb, dtype=np.int64))
             self._totals.append(0)
             self._next_evict.append(0)
-        return aid
 
     # ------------------------------------------------------------------ I/O
 
@@ -82,11 +92,12 @@ class SupplyEstimator:
     def record_batch(self, atom_ids: np.ndarray, times: np.ndarray) -> None:
         """Vectorized record of a time-sorted batch of check-ins.
 
-        ``atom_ids`` must come from :meth:`intern` (dense ids of this
-        estimator's key space).
+        ``atom_ids`` are dense ids of the shared interner (e.g. straight from
+        ``EligibilityIndex.classify`` when the interner is shared).
         """
         if len(times) == 0:
             return
+        self._ensure(int(atom_ids.max()))
         if self._t0 is None:
             self._t0 = float(times[0])
         self._now = max(self._now, float(times[-1]))
@@ -133,12 +144,14 @@ class SupplyEstimator:
 
     def rate(self, atom: AtomKey) -> float:
         """Estimated check-in rate (devices/sec) for one atom."""
-        aid = self._id_by_key.get(atom)
-        if aid is None:
+        aid = self.interner.id_of(atom)
+        if aid is None or aid >= len(self._totals):
             return self.prior_rate
         return self.rate_id(aid)
 
     def rate_id(self, aid: int) -> float:
+        if aid >= len(self._totals):
+            return self.prior_rate
         self._evict_id(aid)
         n = self._totals[aid]
         if n == 0:
@@ -153,8 +166,8 @@ class SupplyEstimator:
 
     def known_atoms(self) -> Tuple[AtomKey, ...]:
         out = []
-        for aid, key in enumerate(self._key_by_id):
+        for aid in range(len(self._totals)):
             self._evict_id(aid)
             if self._totals[aid] > 0:
-                out.append(key)
+                out.append(self.interner.key_of(aid))
         return tuple(out)

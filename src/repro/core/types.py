@@ -103,6 +103,12 @@ class JobRequest:
     alloc_complete_time: Optional[float] = None
     complete_time: Optional[float] = None
     aborted: int = 0                   # times this round has been aborted/retried
+    # --- simulator-internal response batching (sorted arrival arrays) ---
+    # pending responses live in a per-request min-heap; the simulator's global
+    # event heap holds at most ONE armed entry per request (at ``resp_t``)
+    # instead of one entry per granted device.
+    resp_buf: Optional[List[tuple]] = field(default=None, repr=False)
+    resp_t: float = float("inf")       # armed head response time (inf = none)
 
     @property
     def remaining(self) -> int:
@@ -129,6 +135,11 @@ class Job:
     deadline: float = 600.0            # response deadline (5-15 min per paper)
     overcommit: float = 1.0            # job-chosen overcommit factor (§3: fault
     #                                    tolerance is delegated to jobs)
+    # --- multi-tenant tags (scenario engine: priority-tiered tenants) ---
+    priority: float = 1.0              # scheduling weight (1.0 = neutral; higher
+    #                                    priorities shrink the effective demand
+    #                                    key, serving the job earlier in-group)
+    tenant: str = "default"            # owning tenant, for per-tier reporting
     # --- bookkeeping ---
     status: JobStatus = JobStatus.PENDING
     rounds_done: int = 0

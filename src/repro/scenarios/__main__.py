@@ -1,0 +1,109 @@
+"""CLI for the scenario engine.
+
+Examples::
+
+    python -m repro.scenarios list
+    python -m repro.scenarios run flash_crowd --sched venn,random
+    python -m repro.scenarios run --all --fast
+    python -m repro.scenarios run churn_storm --record storm.csv --sched venn
+    python -m repro.scenarios replay baseline_even storm.csv --sched venn
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+from . import library  # noqa: F401  (populates the registry)
+from .runner import DEFAULT_SCHEDS, comparison_table, run_scenario
+from .spec import all_scenarios, get_scenario, scenario_names
+
+
+def _scheds(arg: str) -> List[str]:
+    return [s.strip() for s in arg.split(",") if s.strip()]
+
+
+def _seeds(arg: str) -> List[int]:
+    return [int(s) for s in arg.split(",") if s.strip()]
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(prog="python -m repro.scenarios",
+                                description="Venn scenario engine")
+    sub = p.add_subparsers(dest="cmd", required=True)
+
+    sub.add_parser("list", help="list registered scenarios")
+
+    run = sub.add_parser("run", help="run scenario(s) across schedulers/seeds")
+    run.add_argument("name", nargs="?", help="scenario name (or --all)")
+    run.add_argument("--all", action="store_true", dest="run_all",
+                     help="run every registered scenario")
+    run.add_argument("--sched", type=_scheds, default=list(DEFAULT_SCHEDS),
+                     help="comma-separated schedulers (default: venn,random)")
+    run.add_argument("--seeds", type=_seeds, default=[0],
+                     help="comma-separated seeds (default: 0)")
+    run.add_argument("--fast", action="store_true",
+                     help="shrunk smoke-run sizing")
+    run.add_argument("--record", default=None, metavar="PATH",
+                     help="record the first run's device stream to a trace "
+                          "file (.csv or .jsonl)")
+
+    rep = sub.add_parser("replay", help="run a scenario's jobs over a "
+                                        "recorded device trace")
+    rep.add_argument("name", help="scenario providing the job side")
+    rep.add_argument("trace", help="trace file (.csv or .jsonl)")
+    rep.add_argument("--sched", type=_scheds, default=list(DEFAULT_SCHEDS))
+    rep.add_argument("--seeds", type=_seeds, default=[0])
+    rep.add_argument("--fast", action="store_true")
+    return p
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    if args.cmd == "list":
+        for spec in all_scenarios():
+            print(f"{spec.name:<22} {spec.description}")
+        return 0
+    if args.cmd == "run":
+        if args.run_all:
+            names = scenario_names()
+        elif args.name:
+            names = [args.name]
+        else:
+            print("error: give a scenario name or --all", file=sys.stderr)
+            return 2
+        for name in names:
+            spec = get_scenario(name)
+            record = args.record
+            if record is not None and len(names) > 1:
+                # one trace file per scenario (never silently overwrite);
+                # split on the basename only — dots in directories stay put
+                p = Path(record)
+                new = f"{p.stem}.{name}{p.suffix}" if p.suffix \
+                    else f"{p.name}.{name}"
+                record = str(p.with_name(new))
+            try:
+                results = run_scenario(spec, scheds=args.sched,
+                                       seeds=args.seeds, fast=args.fast,
+                                       record=record)
+            except ValueError as e:
+                print(f"error: {e}", file=sys.stderr)
+                return 2
+            print(f"\n== {spec.name} ==  {spec.description}")
+            if record is not None:
+                print(f"(device stream recorded to {record})")
+            print(comparison_table(results))
+        return 0
+    if args.cmd == "replay":
+        spec = get_scenario(args.name)
+        results = run_scenario(spec, scheds=args.sched, seeds=args.seeds,
+                               fast=args.fast, replay=args.trace)
+        print(f"\n== {spec.name} (replay: {args.trace}) ==")
+        print(comparison_table(results))
+        return 0
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -21,18 +21,29 @@ struct-of-arrays (:class:`DeviceChunk`) — times, capabilities, speeds, plus
 pre-sampled response-time and failure draws — so the simulator touches NumPy
 arrays per check-in and materializes a :class:`~repro.core.types.Device`
 object only for granted devices.
+
+Stream protocol: the simulator does not talk to generators directly — it
+consumes any :class:`ChunkStream`, a pull source of time-sorted, non-
+overlapping chunks.  :class:`GeneratorStream` adapts a
+:class:`DeviceGenerator` (owning the span-bounding logic that used to live in
+the simulator); the scenario engine supplies modulated and trace-replay
+streams behind the same protocol.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Iterator, List, Tuple
+from typing import Iterator, List, Optional, Protocol, Tuple
 
 import numpy as np
 
 from ..core.types import Device, Requirement
 
 DAY = 24 * 3600.0
+
+# Device chunks span at most this much simulated time (smaller spans are used
+# at high rates so a chunk's arrays stay within memory).
+CHUNK_SECONDS = 6 * 3600.0
 
 # The four requirement classes of Figure 8a.
 REQ_GENERAL = Requirement.of("general", cpu=1.0, mem=1.0)
@@ -121,11 +132,17 @@ class DeviceGenerator:
     def _max_rate(self) -> float:
         return self.cfg.base_rate * (1.0 + self.cfg.diurnal_amplitude)
 
+    def _max_rate_window(self, t0: float, t1: float) -> float:
+        """Upper rate bound over ``[t0, t1)`` for the thinning sampler.
+        Subclasses with localized rate events (scenario spikes) tighten this
+        so a short burst does not inflate candidate sampling everywhere."""
+        return self._max_rate()
+
     # ------------------------------------------------------------- sampling
 
     def checkin_times(self, t0: float, t1: float) -> np.ndarray:
         """Thinning sampler for the non-homogeneous Poisson process."""
-        lam = self._max_rate()
+        lam = self._max_rate_window(t0, t1)
         n = self.rng.poisson(lam * (t1 - t0))
         ts = np.sort(self.rng.uniform(t0, t1, size=n))
         keep = self.rng.uniform(0, lam, size=n) < self.rate_array(ts)
@@ -187,4 +204,57 @@ class DeviceGenerator:
     def fails(self, device: Device) -> bool:
         return fails_from(device.speed, float(self.rng.uniform()),
                           self.cfg.fail_base, self.cfg.fail_slow_boost)
+
+
+# --------------------------------------------------------------------------- #
+# Chunk streams (the simulator's device-source protocol)
+# --------------------------------------------------------------------------- #
+
+class ChunkStream(Protocol):
+    """A pull source of time-sorted device check-in chunks.
+
+    Contract: successive :meth:`next_chunk` calls yield non-empty
+    :class:`DeviceChunk` s whose times are sorted within each chunk and
+    non-decreasing across chunks; ``None`` means the stream is exhausted.
+    ``fail_base`` / ``fail_slow_boost`` parameterize the failure model the
+    simulator applies to each chunk's pre-sampled ``fail_u`` draws.
+    """
+
+    fail_base: float
+    fail_slow_boost: float
+
+    def next_chunk(self) -> Optional[DeviceChunk]: ...
+
+
+class GeneratorStream:
+    """Adapts a :class:`DeviceGenerator` to the :class:`ChunkStream` protocol.
+
+    Owns the chunk-span policy: spans are bounded so high-rate populations
+    stay within memory (~250k check-ins per chunk), and empty spans are
+    skipped so idle stretches cost one ``sample_chunk`` each, not one chunk
+    load in the simulator."""
+
+    def __init__(self, gen: DeviceGenerator, horizon: float):
+        self.gen = gen
+        self.horizon = float(horizon)
+        self.fail_base = gen.cfg.fail_base
+        self.fail_slow_boost = gen.cfg.fail_slow_boost
+        self._t0 = 0.0
+
+    def next_chunk(self) -> Optional[DeviceChunk]:
+        while self._t0 < self.horizon:
+            t0 = self._t0
+            # bound chunk size so high-rate stretches stay within memory,
+            # using the rate bound over the *upcoming window* — a localized
+            # spike shrinks spans near it, not across the whole horizon
+            # (max(rate, eps) also keeps zero-traffic populations valid)
+            lam = self.gen._max_rate_window(
+                t0, min(t0 + CHUNK_SECONDS, self.horizon))
+            span = min(CHUNK_SECONDS, max(600.0, 250_000.0 / max(lam, 1e-9)))
+            t1 = min(t0 + span, self.horizon)
+            self._t0 = t1
+            ck = self.gen.sample_chunk(t0, t1)
+            if ck.n:
+                return ck
+        return None
 

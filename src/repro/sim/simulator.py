@@ -10,18 +10,29 @@ concern, §3 — the simulator models it with quorum + deadline + retry).
 Control events (heapq-ordered by time, then a monotone sequence id):
 
 * ``JOB_ARRIVAL``     — job enters, submits round-0 request
-* ``RESPONSE``        — a granted device reports back (ok / failed)
+* ``RESPONSE``        — the next granted device of one request reports back
 * ``DEADLINE``        — response-collection deadline for one request attempt
 
+RESPONSE events are **batched per request**: granted devices land in a
+per-request min-heap of (response-time, device) rows and the control heap
+holds at most one *armed* entry per request (its earliest pending response).
+Processing an armed entry pops the per-request heap and re-arms for the next
+row, so the control heap stays O(outstanding requests) instead of
+O(outstanding granted devices) — the grant/response floor of the heap traffic.
+
 Device check-ins do **not** go through the heap: they arrive as time-sorted
-struct-of-arrays chunks (:class:`~repro.sim.devices.DeviceChunk`) that the
-main loop merges against the heap by timestamp.  Each chunk is classified to
-interned atom ids in one vectorized pass (re-classified in place if the
-scheduler's requirement set grows mid-chunk), handed to the scheduler via
-``begin_chunk`` (which batch-feeds the supply estimator), and then each
-check-in is a single ``sched.checkin`` call; a ``Device`` object is only
-materialized for granted check-ins.  While no request is outstanding the
-cursor skips straight to the next control event, so idle periods cost ~zero.
+struct-of-arrays chunks (:class:`~repro.sim.devices.DeviceChunk`) pulled from
+any :class:`~repro.sim.devices.ChunkStream` (synthetic generator, scenario
+stream, or trace replay) and merged against the heap by timestamp.  Each chunk
+is classified to interned atom ids in one vectorized pass (re-classified in
+place if the scheduler's requirement set grows mid-chunk), handed to the
+scheduler via ``begin_chunk`` (which batch-feeds the supply estimator), and
+then each check-in is a single ``sched.checkin`` call; a ``Device`` object is
+only materialized for granted check-ins.  While no request is outstanding the
+cursor skips straight to the next control event, and while the scheduler's
+liveness bitmap marks a check-in's atom *dead* (no pending request can accept
+it — e.g. during tiered phases) the check-in is skipped without a scheduler
+call at all.
 """
 from __future__ import annotations
 
@@ -35,13 +46,12 @@ import numpy as np
 
 from ..core.baselines import BaseScheduler
 from ..core.types import Device, Job, JobRequest, JobStatus
-from .devices import (DeviceChunk, DeviceGenerator, PopulationConfig,
-                      fails_from, response_time_from)
+from .devices import (ChunkStream, DeviceChunk, DeviceGenerator,
+                      GeneratorStream, PopulationConfig, fails_from,
+                      response_time_from)
 from .metrics import RoundRecord, SimMetrics
 
 JOB_ARRIVAL, RESPONSE, DEADLINE = 0, 1, 2
-
-CHUNK_SECONDS = 6 * 3600.0
 
 
 @dataclass
@@ -53,17 +63,27 @@ class SimConfig:
 
 class Simulator:
     def __init__(self, jobs: List[Job], scheduler: BaseScheduler,
-                 population: PopulationConfig, cfg: Optional[SimConfig] = None):
+                 population: Optional[PopulationConfig] = None,
+                 cfg: Optional[SimConfig] = None,
+                 stream: Optional[ChunkStream] = None):
         self.jobs = jobs
         self.sched = scheduler
-        self.devgen = DeviceGenerator(population)
         self.cfg = cfg or SimConfig()
+        if stream is None:
+            self.devgen: Optional[DeviceGenerator] = DeviceGenerator(
+                population or PopulationConfig())
+            stream = GeneratorStream(self.devgen, self.cfg.max_time)
+        else:
+            if population is not None:
+                raise ValueError("pass either population or stream, not both")
+            self.devgen = getattr(stream, "gen", None)
+        self.stream = stream
         self._seq = itertools.count()
         self._heap: List[Tuple[float, int, int, object]] = []
         self.metrics = SimMetrics()
         self.now = 0.0
         self.checkins_seen = 0        # check-ins examined by the scheduler
-        self.checkins_skipped = 0     # check-ins skipped during idle periods
+        self.checkins_skipped = 0     # check-ins skipped (idle or dead atom)
 
     # ------------------------------------------------------------------ api
 
@@ -76,7 +96,6 @@ class Simulator:
         self._times: list = []          # list mirrors of the chunk arrays —
         self._cursor = 0                # Python-float indexing is ~3x cheaper
         self._chunk_version = -1        # than NumPy scalar indexing here
-        self._next_chunk_t0 = 0.0
         self._load_next_chunk()
         heap = self._heap
         heappop = heapq.heappop
@@ -84,11 +103,12 @@ class Simulator:
         n_jobs = len(self.jobs)
         sched = self.sched
         sched_checkin = sched.checkin
+        sched_live = sched.live_atoms
         index = sched.index
         heappush = heapq.heappush
         next_seq = self._seq.__next__
-        pop_cfg = self.devgen.cfg
-        fail_base, fail_boost = pop_cfg.fail_base, pop_cfg.fail_slow_boost
+        fail_base = self.stream.fail_base
+        fail_boost = self.stream.fail_slow_boost
         rt_from, f_from = response_time_from, fails_from
         inf = math.inf
         stop = False
@@ -105,7 +125,13 @@ class Simulator:
             n_times = len(times)
             cursor = self._cursor
             seg_start = cursor
+            seg_dead = 0
             last_t = None
+            # liveness bitmap: None while the plan is dirty (first checkin
+            # replans; we refresh once after it).  The list object is mutated
+            # in place by the scheduler across mid-drain replans.
+            live = sched_live()
+            live_refreshed = False
             # the heap is only pushed to (never popped) inside this drain, so
             # its top is cached and refreshed after each grant
             heap_t = heap[0][0] if heap else inf
@@ -121,7 +147,8 @@ class Simulator:
                     # exist): no check-in can be granted; jump the cursor to
                     # the next control event in one step
                     self._cursor = cursor
-                    self.checkins_seen += cursor - seg_start
+                    self.checkins_seen += cursor - seg_start - seg_dead
+                    self.checkins_skipped += seg_dead
                     self._skip_idle(min(heap_t, max_time))
                     times, cpu, mem = self._times, self._cpu, self._mem
                     spd, rz, fu = self._speed, self._resp_z, self._fail_u
@@ -129,10 +156,26 @@ class Simulator:
                     n_times = len(times)
                     cursor = self._cursor
                     seg_start = cursor
+                    seg_dead = 0
+                    continue
+                aid = aids[cursor]
+                if live is not None and aid < len(live) and not live[aid]:
+                    # dead atom: no pending request can accept this device
+                    # (e.g. a tiered phase where only one atom's speed band
+                    # is still being collected) — skip the scheduler call
+                    cursor += 1
+                    seg_dead += 1
+                    last_t = dev_t
                     continue
                 speed = spd[cursor]
-                req = sched_checkin(aids[cursor], cpu[cursor], mem[cursor],
+                req = sched_checkin(aid, cpu[cursor], mem[cursor],
                                     speed, dev_t)
+                if live is None and not live_refreshed:
+                    # a dirty plan was just recompiled inside checkin; pick up
+                    # the fresh bitmap (once per segment — stays None for
+                    # schedulers without liveness)
+                    live = sched_live()
+                    live_refreshed = True
                 i = cursor
                 cursor += 1
                 last_t = dev_t
@@ -141,7 +184,7 @@ class Simulator:
                     continue                           # device leaves unused
                 self.now = dev_t
                 dev = Device(caps={"cpu": cpu[i], "mem": mem[i]}, speed=speed,
-                             checkin_time=dev_t, atom_id=aids[i])
+                             checkin_time=dev_t, atom_id=aid)
                 req.granted += 1
                 if req.granted >= req.demand:
                     self._open -= 1
@@ -151,8 +194,16 @@ class Simulator:
                 rt = rt_from(speed, rz[i], job.task_time_mean,
                              job.task_time_sigma)
                 ok = not f_from(speed, fu[i], fail_base, fail_boost)
-                heappush(heap, (dev_t + rt, next_seq(), RESPONSE,
-                                (req, dev, rt, ok)))
+                t_resp = dev_t + rt
+                buf = req.resp_buf
+                if buf is None:
+                    buf = req.resp_buf = []
+                heappush(buf, (t_resp, next_seq(), dev, rt, ok))
+                if t_resp < req.resp_t:
+                    # arm (or re-arm earlier) the request's single RESPONSE
+                    # entry; a previously armed later entry goes stale
+                    req.resp_t = t_resp
+                    heappush(heap, (t_resp, next_seq(), RESPONSE, req))
                 if req.granted >= req.demand and req.alloc_complete_time is None:
                     req.alloc_complete_time = dev_t    # scheduling delay ends
                     job.status = JobStatus.COLLECTING
@@ -160,7 +211,8 @@ class Simulator:
                                     DEADLINE, req))
                 heap_t = heap[0][0]
             self._cursor = cursor
-            self.checkins_seen += cursor - seg_start
+            self.checkins_seen += cursor - seg_start - seg_dead
+            self.checkins_skipped += seg_dead
             if last_t is not None:
                 self.now = last_t       # ungranted check-ins don't store
                 #                         self.now each step; sync at seg end
@@ -180,7 +232,7 @@ class Simulator:
             if kind == JOB_ARRIVAL:
                 self._on_job_arrival(payload)           # type: ignore[arg-type]
             elif kind == RESPONSE:
-                self._on_response(*payload)             # type: ignore[misc]
+                self._pop_response(payload)             # type: ignore[arg-type]
             elif kind == DEADLINE:
                 self._on_deadline(payload)              # type: ignore[arg-type]
         self.metrics.finalize(self.jobs, self.now)
@@ -194,19 +246,14 @@ class Simulator:
     # ---- device stream (struct-of-arrays chunks) ----
 
     def _load_next_chunk(self) -> None:
-        """Generate chunks lazily until one has check-ins (or horizon ends)."""
+        """Pull chunks from the stream until one has check-ins (or it ends)."""
         self._chunk = None
         self._times = self._cpu = self._mem = []
         self._speed = self._resp_z = self._fail_u = self._aids = []
-        # bound chunk size so high base_rate scenarios stay within memory
-        # (max(rate, eps) also keeps zero-traffic populations valid)
-        span = min(CHUNK_SECONDS,
-                   max(600.0, 250_000.0 / max(self.devgen._max_rate(), 1e-9)))
-        while self._next_chunk_t0 < self.cfg.max_time:
-            t0 = self._next_chunk_t0
-            t1 = min(t0 + span, self.cfg.max_time)
-            self._next_chunk_t0 = t1
-            ck = self.devgen.sample_chunk(t0, t1)
+        while True:
+            ck = self.stream.next_chunk()
+            if ck is None:
+                return
             if ck.n == 0:
                 continue
             self._classify_chunk(ck, 0)
@@ -263,6 +310,26 @@ class Simulator:
         job.status = JobStatus.WAITING
         self._open += 1
         self.sched.on_request(req, self.now)
+
+    def _pop_response(self, req: JobRequest) -> None:
+        """Process the armed RESPONSE entry of ``req`` at ``self.now``."""
+        buf = req.resp_buf
+        if req.resp_t != self.now or not buf:
+            return                              # stale armed entry
+        if req.complete_time is not None or req.job.current is not req:
+            # round over (completed or aborted): drop the whole buffer in one
+            # event instead of one stale pop per granted device
+            req.resp_buf = None
+            req.resp_t = math.inf
+            return
+        _, _, dev, rt, ok = heapq.heappop(buf)
+        self._on_response(req, dev, rt, ok)
+        if buf and req.complete_time is None and req.job.current is req:
+            req.resp_t = buf[0][0]              # re-arm for the next response
+            self._push(buf[0][0], RESPONSE, req)
+        else:
+            req.resp_buf = None
+            req.resp_t = math.inf
 
     def _on_response(self, req: JobRequest, dev: Device, rt: float, ok: bool) -> None:
         if req.complete_time is not None or req.job.current is not req:
@@ -330,6 +397,6 @@ class Simulator:
 
 def run_workload(jobs: List[Job], scheduler: BaseScheduler,
                  population: Optional[PopulationConfig] = None,
-                 sim: Optional[SimConfig] = None) -> SimMetrics:
-    population = population or PopulationConfig()
-    return Simulator(jobs, scheduler, population, sim).run()
+                 sim: Optional[SimConfig] = None,
+                 stream: Optional[ChunkStream] = None) -> SimMetrics:
+    return Simulator(jobs, scheduler, population, sim, stream=stream).run()

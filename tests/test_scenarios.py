@@ -1,0 +1,352 @@
+"""Scenario engine tests.
+
+* registry completeness — ≥8 scenarios, every one runs (venn + random) under
+  REPRO_BENCH_FAST-sized configs;
+* trace record → replay round-trip: same seed ⇒ bit-identical ``SimMetrics``;
+* streamed trace ingest stays within ``chunk_rows`` bounded memory, and a
+  timestamps-only (FedScale-style) trace is a valid stream;
+* spec compilation: modulation events actually modulate the chunks; tenant
+  tiers tag jobs and the priority weight feeds the demand key;
+* fast-path satellites: shared atom interner, dispatch liveness list.
+"""
+import math
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.core import SCHEDULERS, VennScheduler
+from repro.core.dispatch import compile_plan
+from repro.core.fairness import FairnessPolicy
+from repro.core.types import Job, Requirement
+from repro.scenarios import (ScenarioSpec, TraceReplayStream, all_scenarios,
+                             build_jobs, build_stream, fast_scaled,
+                             get_scenario, run_one, scenario_names)
+from repro.scenarios.__main__ import main as cli_main
+from repro.sim import JobTraceConfig, PopulationConfig, SimConfig
+
+# test-sized scaling on top of --fast: every scenario still materializes its
+# pattern, but a full registry sweep stays a few seconds
+def _tiny(spec: ScenarioSpec) -> ScenarioSpec:
+    spec = fast_scaled(spec)
+    return replace(
+        spec,
+        jobs=replace(spec.jobs, num_jobs=5),
+        sim=replace(spec.sim, max_time=1.5 * 24 * 3600.0),
+    )
+
+
+# ---------------------------------------------------------------- registry
+
+def test_registry_has_at_least_eight_scenarios():
+    names = scenario_names()
+    assert len(names) >= 8, names
+    for must in ("baseline_even", "flash_crowd", "diurnal_timezones",
+                 "churn_storm", "capacity_drift", "priority_tenants",
+                 "hot_atom", "long_tail_stragglers"):
+        assert must in names
+
+
+def test_registry_specs_validate_and_names_match():
+    for spec in all_scenarios():
+        spec.validate()
+        assert get_scenario(spec.name) is spec
+
+
+@pytest.mark.parametrize("name", scenario_names())
+def test_every_scenario_runs_under_fast_configs(name):
+    spec = _tiny(get_scenario(name))
+    for sched in ("venn", "random"):
+        r = run_one(spec, sched, seed=0)
+        assert math.isfinite(r.metrics.avg_jct)
+        assert len(r.metrics.jcts) == spec.jobs.num_jobs
+
+
+# ------------------------------------------------------- record -> replay
+
+@pytest.mark.parametrize("suffix", ["csv", "jsonl"])
+def test_trace_record_replay_round_trip_bit_identical(tmp_path, suffix):
+    spec = _tiny(get_scenario("churn_storm"))
+    path = str(tmp_path / f"trace.{suffix}")
+    rec = run_one(spec, "venn", seed=0, record=path)
+    rep = run_one(spec, "venn", seed=0, replay=path)
+    assert rec.metrics.jcts == rep.metrics.jcts
+    assert rec.metrics.rounds == rep.metrics.rounds
+    assert rec.metrics.summary() == rep.metrics.summary()
+    # the recorder drains to the full horizon on close, so the trace is
+    # consumer-independent: replaying a *different* scheduler over it equals
+    # that scheduler's own synthetic run exactly
+    other = run_one(spec, "random", seed=0, replay=path)
+    direct = run_one(spec, "random", seed=0)
+    assert other.metrics.jcts == direct.metrics.jcts
+    assert other.metrics.rounds == direct.metrics.rounds
+
+
+def test_replay_stream_failure_params_come_from_header(tmp_path):
+    spec = _tiny(get_scenario("baseline_even"))
+    path = str(tmp_path / "t.csv")
+    run_one(spec, "random", seed=0, record=path)
+    stream = TraceReplayStream(path)
+    assert stream.fail_base == pytest.approx(spec.population.fail_base)
+    assert stream.fail_slow_boost == pytest.approx(spec.population.fail_slow_boost)
+    stream.close()
+
+
+# ---------------------------------------------------- bounded-memory ingest
+
+def test_streamed_ingest_bounded_chunks(tmp_path):
+    n, cap = 10_000, 512
+    path = tmp_path / "big.csv"
+    times = np.sort(np.random.default_rng(0).uniform(0, 1e6, size=n))
+    with open(path, "w") as fh:
+        fh.write("time,cpu,mem,speed,resp_z,fail_u\n")
+        for t in times.tolist():
+            fh.write(f"{t!r},4.0,4.0,1.0,0.0,0.5\n")
+    stream = TraceReplayStream(str(path), chunk_rows=cap)
+    total, chunks = 0, 0
+    while True:
+        ck = stream.next_chunk()
+        if ck is None:
+            break
+        assert ck.n <= cap, "chunk exceeded the bounded-memory row cap"
+        total += ck.n
+        chunks += 1
+    assert total == n
+    assert chunks == math.ceil(n / cap)
+
+
+def test_timestamps_only_trace_is_valid(tmp_path):
+    """FedScale-style availability rows: just check-in times."""
+    path = tmp_path / "avail.csv"
+    with open(path, "w") as fh:
+        fh.write("time\n")
+        for k in range(200):
+            fh.write(f"{60.0 * k}\n")
+    stream = TraceReplayStream(str(path), chunk_rows=64, seed=3)
+    ck = stream.next_chunk()
+    assert ck is not None and ck.n == 64
+    assert np.all(ck.cpu == 4.0) and np.all(ck.speed == 1.0)
+    assert np.all((ck.fail_u >= 0) & (ck.fail_u <= 1))
+    stream.close()
+
+
+def test_record_multiple_seeds_rejected():
+    from repro.scenarios import run_scenario
+    spec = _tiny(get_scenario("baseline_even"))
+    with pytest.raises(ValueError, match="multiple seeds"):
+        run_scenario(spec, scheds=("random",), seeds=(0, 1), record="x.csv")
+
+
+def test_unsorted_trace_rejected(tmp_path):
+    path = tmp_path / "bad.csv"
+    with open(path, "w") as fh:
+        fh.write("time\n10.0\n5.0\n")
+    stream = TraceReplayStream(str(path))
+    with pytest.raises(ValueError, match="not sorted"):
+        stream.next_chunk()
+
+
+# ------------------------------------------------------- spec compilation
+
+def test_rate_spike_raises_rate_inside_window():
+    spec = get_scenario("flash_crowd")
+    horizon = spec.sim.max_time
+    stream = build_stream(spec, seed=0)
+    gen = stream.gen
+    spike = spec.rate_spikes[0]
+    inside = 0.5 * (spike.start + spike.stop) * horizon
+    outside = 0.1 * horizon
+    assert gen.rate(inside) > 4 * gen.rate(outside)
+
+
+def test_overlapping_spikes_keep_thinning_bound_valid():
+    """Overlapping spike windows stack multiplicatively in the rate envelope;
+    the thinning bound must stay >= the true rate or arrivals are silently
+    capped."""
+    from repro.scenarios import RateSpike
+    from repro.scenarios.streams import ModulatedGenerator
+    spec = get_scenario("flash_crowd")
+    horizon = spec.sim.max_time
+    spikes = (RateSpike(start=0.2, stop=0.6, multiplier=3.0),
+              RateSpike(start=0.4, stop=0.8, multiplier=4.0))
+    spec = replace(spec, rate_spikes=spikes)
+    gen = build_stream(spec, seed=0).gen
+    assert isinstance(gen, ModulatedGenerator)
+    t_overlap = 0.5 * horizon
+    true_rate = gen.rate(t_overlap)
+    assert gen.rate_array(np.array([t_overlap]))[0] == pytest.approx(true_rate)
+    bound = gen._max_rate_window(0.45 * horizon, 0.55 * horizon)
+    assert bound >= true_rate
+    assert gen._max_rate() >= true_rate
+    # windows not touching any spike keep the tight spike-free bound
+    quiet = gen._max_rate_window(0.9 * horizon, 0.95 * horizon)
+    assert quiet < true_rate / 2
+
+
+def test_jsonl_object_rows_are_valid(tmp_path):
+    """Headerless JSONL of row objects (the natural external format)."""
+    import json as _json
+    path = tmp_path / "rows.jsonl"
+    with open(path, "w") as fh:
+        for k in range(100):
+            fh.write(_json.dumps({"time": 30.0 * k, "cpu": 6.0,
+                                  "mem": 2.0, "speed": 1.5}) + "\n")
+    stream = TraceReplayStream(str(path), chunk_rows=40, seed=1)
+    ck = stream.next_chunk()
+    assert ck is not None and ck.n == 40
+    assert np.all(ck.cpu == 6.0) and np.all(ck.speed == 1.5)
+    total = ck.n
+    while (ck := stream.next_chunk()) is not None:
+        total += ck.n
+    assert total == 100
+
+
+def test_failure_storm_forces_failures():
+    spec = get_scenario("churn_storm")
+    horizon = spec.sim.max_time
+    stream = build_stream(spec, seed=0)
+    s = spec.failure_storms[1]          # the 80% storm
+    t0, t1 = s.start * horizon, s.stop * horizon
+    ck = stream.gen.sample_chunk(t0, min(t1, t0 + 6 * 3600.0))
+    forced = np.mean(ck.fail_u < 0)
+    assert 0.6 < forced < 0.95          # ~fail_prob of devices clamped
+
+
+def test_capacity_drift_scales_late_chunks():
+    spec = get_scenario("capacity_drift")
+    horizon = spec.sim.max_time
+    gen_early = build_stream(spec, seed=0).gen
+    early = gen_early.sample_chunk(0.0, 6 * 3600.0)
+    late = gen_early.sample_chunk(0.95 * horizon, 0.95 * horizon + 6 * 3600.0)
+    assert np.median(late.cpu) > 1.8 * np.median(early.cpu)
+
+
+def test_speed_tail_slows_a_fraction():
+    spec = get_scenario("long_tail_stragglers")
+    plain = replace(spec, speed_tail=None)
+    slow_ck = build_stream(spec, seed=0).gen.sample_chunk(0, 12 * 3600.0)
+    base_ck = build_stream(plain, seed=0).gen.sample_chunk(0, 12 * 3600.0)
+    # same population seed: identical devices, a fraction slowed
+    slowed = np.mean(slow_ck.speed < base_ck.speed * 0.5)
+    assert 0.2 < slowed < 0.4
+
+
+def test_pinned_scenario_uses_single_requirement():
+    spec = get_scenario("hot_atom")
+    jobs = build_jobs(spec, seed=0)
+    assert {j.requirement.name for j in jobs} == {"high_performance"}
+
+
+def test_tenant_tiers_tag_jobs_and_priority_feeds_demand_key():
+    spec = get_scenario("priority_tenants")
+    jobs = build_jobs(spec, seed=0)
+    tenants = {j.tenant for j in jobs}
+    assert tenants == {"gold", "silver", "bronze"}
+    n = len(jobs)
+    gold = sum(j.tenant == "gold" for j in jobs)
+    assert abs(gold / n - 0.2) < 0.15
+    # priority divides the effective demand key (even at epsilon = 0)
+    pol = FairnessPolicy(epsilon=0.0)
+    req = Requirement.of("general", cpu=1.0)
+    hi = Job(job_id=0, requirement=req, demand_per_round=100, total_rounds=1,
+             arrival_time=0.0, priority=4.0)
+    lo = Job(job_id=1, requirement=req, demand_per_round=100, total_rounds=1,
+             arrival_time=0.0, priority=1.0)
+    solo = lambda j: 1.0
+    assert pol.demand_key(hi, 2, solo) < pol.demand_key(lo, 2, solo)
+
+
+# ------------------------------------------------- fast-path satellites
+
+def test_venn_scheduler_shares_one_interner():
+    s = VennScheduler(seed=0)
+    assert s.supply.interner is s.index.interner
+    ids = s.index.classify({"cpu": np.array([8.0, 1.0]),
+                            "mem": np.array([8.0, 1.0])})
+    # ids minted by classification are directly recordable — no LUT
+    s.supply.record_batch(ids, np.array([10.0, 20.0]))
+    for aid in set(ids.tolist()):
+        assert s.supply.rate_id(int(aid)) > 0 or s.supply.prior_rate > 0
+    assert not hasattr(s, "_supply_lut")
+
+
+def test_dispatch_live_list_marks_dead_atoms():
+    from repro.core.eligibility import EligibilityIndex
+    from repro.core.irs import venn_schedule
+    from repro.core.types import JobGroup, JobRequest
+    from repro.sim.devices import REQUIREMENT_CLASSES
+
+    index = EligibilityIndex(list(REQUIREMENT_CLASSES))
+    caps = {"cpu": 4.0 * np.exp(0.6 * np.random.default_rng(1).standard_normal(2000)),
+            "mem": 4.0 * np.exp(0.6 * np.random.default_rng(2).standard_normal(2000))}
+    ids = index.classify(caps)
+    atoms = {index.key_of(int(a)) for a in set(ids.tolist())}
+    req_cls = REQUIREMENT_CLASSES[3]          # high_performance
+    g = JobGroup(requirement=req_cls)
+    j = Job(job_id=0, requirement=req_cls, demand_per_round=5, total_rounds=1,
+            arrival_time=0.0)
+    j.current = JobRequest(job=j, round_index=0, demand=5, submit_time=0.0)
+    g.jobs.append(j)
+    g.eligible_atoms = index.eligible_atoms(req_cls, atoms)
+    g.atom_rates = {a: 1.0 for a in g.eligible_atoms}
+    g.supply = float(len(g.atom_rates))
+    plan = venn_schedule([g], queue_len=lambda x: x.queue_len)
+    for a in atoms:
+        plan.atom_priority.setdefault(a, [])
+    table = compile_plan(plan, index.intern, index.num_atoms, {})
+    live = table.live_list()
+    n_live = 0
+    for a in atoms:
+        aid = index.id_of(a)
+        if "high_performance" in a:
+            assert live[aid], "eligible atom must stay live"
+            n_live += 1
+        else:
+            assert not live[aid], "atom with no candidates must be dead"
+    assert n_live >= 1
+    # uncovered (newly interned) atoms default to live -> lazy replan works
+    fresh = index.intern(frozenset({"synthetic"}))
+    assert fresh >= len(live) or live[fresh]
+
+
+def test_liveness_skip_preserves_results():
+    """The dead-atom skip must not change scheduling outcomes: the same
+    workload yields identical metrics with and without the bitmap."""
+    jobs_cfg = JobTraceConfig(num_jobs=6, seed=4, demand_lo=10, demand_hi=60)
+    pop = PopulationConfig(seed=9, base_rate=2.0)
+    sim_cfg = SimConfig(max_time=3 * 24 * 3600.0)
+
+    from repro.sim import generate_jobs, run_workload
+
+    class NoLivenessVenn(VennScheduler):
+        def live_atoms(self):
+            return None
+
+    m1 = run_workload(generate_jobs(jobs_cfg), VennScheduler(seed=1),
+                      pop, sim_cfg)
+    m2 = run_workload(generate_jobs(jobs_cfg), NoLivenessVenn(seed=1),
+                      pop, sim_cfg)
+    assert m1.jcts == m2.jcts
+    assert m1.rounds == m2.rounds
+
+
+# ------------------------------------------------------------------- CLI
+
+def test_cli_list_and_fast_run(capsys):
+    assert cli_main(["list"]) == 0
+    out = capsys.readouterr().out
+    assert "flash_crowd" in out
+    assert cli_main(["run", "hot_atom", "--fast", "--sched", "random",
+                     "--seeds", "0"]) == 0
+    out = capsys.readouterr().out
+    assert "hot_atom" in out and "random" in out
+
+
+def test_cli_record_then_replay(tmp_path, capsys):
+    trace = str(tmp_path / "t.csv")
+    assert cli_main(["run", "baseline_even", "--fast", "--sched", "random",
+                     "--seeds", "0", "--record", trace]) == 0
+    assert cli_main(["replay", "baseline_even", trace, "--fast",
+                     "--sched", "random", "--seeds", "0"]) == 0
+    out = capsys.readouterr().out
+    assert "replay" in out

@@ -8,7 +8,14 @@ struct-of-arrays device streams) end to end:
   profiling machine); acceptance: >=5x, i.e. <= 4.3s vs the issue baseline;
 * a medium-traffic scenario (base_rate 15, 100 jobs);
 * a heavy-traffic scenario (base_rate 50, 200 jobs) that the scan path could
-  not afford at all — acceptance: completes in under 60s.
+  not afford at all — acceptance: completes in under 60s;
+* a **10x-traffic row** (base_rate 500 ~= 43M check-ins/day, a 2000-job trace
+  contending for a scarce high-performance tier, a quarter simulated day) run
+  under BOTH drain engines: the per-device ``checkin`` loop and the
+  ``repro.accel`` array engine.  Reports end-to-end wall plus the isolated
+  check-in-loop time (``drain_seconds - stream_seconds``, i.e. excluding the
+  engine-independent chunk sampling/classification) — acceptance: metrics
+  identical and the array loop >= 3x faster than the per-device loop.
 
 Each scenario reports wall-clock (best of ``reps``), scheduler check-ins/sec,
 and Venn's avg JCT; results are written to ``BENCH_hotpath.json`` at the repo
@@ -27,6 +34,7 @@ from .common import FAST, emit
 from repro.core import SCHEDULERS
 from repro.scenarios import fast_scaled, get_scenario, run_one
 from repro.sim import JobTraceConfig, PopulationConfig, SimConfig, generate_jobs
+from repro.sim.devices import REQ_HIGHPERF
 from repro.sim.simulator import Simulator
 
 # pre-change wall-clock of the profiled workload, measured on this container
@@ -60,6 +68,71 @@ def run_scenario(base_rate: float, num_jobs: int, days: int, seed: int = 1):
         "checkins_per_sec": (sim.checkins_seen + sim.checkins_skipped) / wall,
         "sched_invocations": sched.sched_invocations,
     }
+
+
+def _tenx_jobs(seed: int = 1):
+    """2000 jobs contending for the scarce high-performance tier."""
+    jobs = generate_jobs(JobTraceConfig(num_jobs=2000, seed=seed,
+                                        mean_interarrival=60.0))
+    for j in jobs:
+        j.requirement = REQ_HIGHPERF
+    return jobs
+
+
+def run_tenx(engine: str, seed: int = 1):
+    """One 10x-traffic run: base_rate 500 against a capability-poor
+    population (the pinned tier is ~0.3% of traffic), a quarter of a
+    simulated day (~15M check-ins).  The regime Venn's contention
+    heuristic targets: a persistently open scarce tier under platform-scale
+    background traffic."""
+    sched = SCHEDULERS["venn"](seed=seed)
+    pop = PopulationConfig(seed=1000 + seed, base_rate=500.0,
+                           cpu_med=1.8, mem_med=1.8)
+    sim = Simulator(_tenx_jobs(seed), sched, pop,
+                    SimConfig(max_time=0.25 * 24 * 3600.0), engine=engine)
+    t0 = time.time()
+    metrics = sim.run()
+    wall = time.time() - t0
+    return {
+        "wall_s": wall,
+        # the check-in loop proper: drain time minus the engine-independent
+        # chunk sampling/classification that happens inside it (engine-side
+        # mirror conversion is attributed to the loop)
+        "checkin_loop_s": sim.drain_seconds - sim.stream_seconds,
+        "stream_s": sim.stream_seconds,
+        # avg JCT is censoring-dominated here (most of the 2000-job trace
+        # arrives beyond the bounded horizon); completed rounds is the
+        # meaningful progress number
+        "rounds_completed": len(metrics.rounds),
+        "checkins": sim.checkins_seen + sim.checkins_skipped,
+    }, metrics
+
+
+def _tenx_row(reps: int):
+    """python-engine vs array-engine comparison on the 10x workload."""
+    row = {}
+    metrics = {}
+    for engine in ("python", "array"):
+        best = None
+        for _ in range(reps):
+            r, m = run_tenx(engine)
+            metrics[engine] = m
+            if best is None or r["checkin_loop_s"] < best["checkin_loop_s"]:
+                best = r
+        row[engine] = best
+    assert metrics["python"].jcts == metrics["array"].jcts, \
+        "array engine must be metric-identical to the per-device loop"
+    assert metrics["python"].rounds == metrics["array"].rounds
+    row["metrics_identical"] = True
+    row["loop_speedup"] = round(
+        row["python"]["checkin_loop_s"] / row["array"]["checkin_loop_s"], 2)
+    row["e2e_speedup"] = round(
+        row["python"]["wall_s"] / row["array"]["wall_s"], 2)
+    row["meets_3x_loop_target"] = row["loop_speedup"] >= 3.0
+    emit("hotpath_tenx_r500_j2000", row["array"]["wall_s"] * 1e6,
+         f"loop={row['loop_speedup']}x e2e={row['e2e_speedup']}x "
+         f"identical=True")
+    return row
 
 
 def _scenario_replay_row():
@@ -121,6 +194,9 @@ def main():
         results["heavy_under_60s"] = heavy["wall_s"] < 60.0
         emit("hotpath_heavy_validates", 0,
              f"under_60s={heavy['wall_s'] < 60.0}")
+
+    if not FAST:
+        results["tenx_r500_j2000"] = _tenx_row(reps=3)
 
     results["scenario_replay_flash_crowd"] = _scenario_replay_row()
 

@@ -1,0 +1,17 @@
+"""Array-native scheduler engine: batched check-in matching.
+
+Holds the scheduler's per-check-in decision state (dispatch slots, tier
+speed bands, remaining-demand counters, supply rings) in dense arrays
+(:mod:`repro.accel.state`) and matches an entire drain segment of device
+check-ins in one vectorized call (:mod:`repro.accel.engine`) — NumPy on CPU,
+jitted JAX + a Pallas masked-first-fit kernel on TPU.  Results are
+bit-identical to the per-device ``scheduler.checkin`` loop; select it with
+``Simulator(engine="array")`` or ``python -m repro.scenarios run <name>
+--engine array``.  See ``README.md`` in this directory for the state layout
+and the kernel contract.
+"""
+from .engine import ArrayMatchEngine, MatchResult, match_chunk, match_chunk_seq
+from .state import MatchState, SupplyRings
+
+__all__ = ["ArrayMatchEngine", "MatchResult", "MatchState", "SupplyRings",
+           "match_chunk", "match_chunk_seq"]

@@ -1,0 +1,5 @@
+"""Pallas kernels for the array-native scheduler engine."""
+from .ref import masked_first_fit_ref
+from .schedule_match import masked_first_fit
+
+__all__ = ["masked_first_fit", "masked_first_fit_ref"]

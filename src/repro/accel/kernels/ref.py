@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the schedule-match kernel (the correctness contract).
+
+The inner step of the fill-position fixed point (:mod:`repro.accel.engine`)
+is a masked first-fit: for each check-in row, the first candidate slot whose
+eligibility mask (atom membership x tier speed band) holds and whose request
+is not yet filled at the row's position.  The oracle is the mathematical
+definition; :mod:`repro.accel.kernels.schedule_match` must match it
+bit-for-bit on every shape.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def masked_first_fit_ref(elig: jnp.ndarray, fillcand: jnp.ndarray,
+                         pos: jnp.ndarray) -> jnp.ndarray:
+    """``kidx[i] = min{k : elig[i, k] and fillcand[i, k] >= pos[i]}``, or
+    ``K`` when no slot is available.
+
+    ``elig``: ``(n, K)`` nonzero where the slot's request accepts the row
+    (atom candidacy x tier band); ``fillcand``: ``(n, K)`` int32 fill
+    position of each candidate's request (``n`` = never fills); ``pos``:
+    ``(n,)`` int32 row positions in segment time order.
+    """
+    avail = (elig != 0) & (fillcand >= pos[:, None])
+    k = jnp.argmax(avail, axis=1).astype(jnp.int32)
+    return jnp.where(avail.any(axis=1), k,
+                     jnp.int32(elig.shape[1]))

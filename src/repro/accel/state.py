@@ -1,0 +1,248 @@
+"""Struct-of-arrays mirrors of the scheduler's per-check-in decision state.
+
+The Python fast path resolves a check-in through object graphs: a
+:class:`~repro.core.dispatch.DispatchTable` maps an interned atom id to an
+ordered list of ``[request, speed_lo, speed_hi]`` slots, and a slot is live
+while its request has remaining demand.  :class:`MatchState` lowers exactly
+that structure into dense arrays so an entire drain segment of check-ins can
+be matched in one vectorized call (:mod:`repro.accel.engine`):
+
+* ``cand_req``  — ``(A, K)`` int64: candidate request indices per atom id, in
+  assignment priority order, ``-1``-padded on the right;
+* ``cand_lo`` / ``cand_hi`` — ``(A, K)`` float64 tier speed bands per slot
+  (``[-inf, inf)`` when the slot is untiered);
+
+``K`` is an adaptive cap, not the longest candidate list: a check-in scans
+its atom's list only until the first live slot whose band accepts it, and
+at most ``#groups`` head slots are tier-banded, so scans terminate within a
+few entries unless many requests fill inside one segment.  Lists longer than
+the cap mark their atom *truncated*; when a truncated row exhausts its
+prefix the engine doubles the cap and re-matches (exact, and rare).  This
+keeps the dense matrices ``O(n x cap)`` instead of ``O(n x open-requests)``.
+
+Remaining arrays:
+* ``remaining`` — ``(R,)`` int64 per-request remaining-demand counters,
+  decremented in place as the simulator applies grants (the array analogue of
+  the dispatch table's incremental slot invalidation);
+* ``covered``  — ``(A,)`` bool: atoms the compiled plan does not cover are
+  *uncovered* and must take the scalar ``checkin`` path (the MISS protocol
+  that triggers Venn's lazy replan).
+
+The state is **rebuilt incrementally**: a rebuild happens only when the
+scheduler's ``match_token()`` changes (a VENN-SCHED recompile, a pending-order
+resort, or an atom-partition refinement); between tokens only ``remaining``
+moves, mirrored per applied grant.
+
+:class:`SupplyRings` is the same treatment for the
+:class:`~repro.core.supply.SupplyEstimator`: the per-atom ring buffers stacked
+into one ``(A, nb)`` matrix with a vectorized eviction mask, so all-atom rate
+queries (a replan input) are one array pass.  The estimator itself exposes the
+write-back variant (``SupplyEstimator.snapshot_rates``) that the Venn replan
+uses; the view here is read-only and exists for kernel-side consumers and for
+cross-checking the scalar path.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from ..core.supply import SupplyEstimator, window_evicted_totals
+from ..core.types import JobRequest
+
+
+class MatchState:
+    """Dense mirror of one scheduler's candidate-slot state.
+
+    Built from ``scheduler.export_match_slots()`` — a list over dense atom ids
+    of either ``None`` (uncovered atom: scalar MISS path) or an ordered list
+    of ``(request, speed_lo, speed_hi)`` candidate slots.
+    """
+
+    __slots__ = ("requests", "remaining", "cand_req", "cand_lo", "cand_hi",
+                 "covered", "has_cand", "has_cand_list",
+                 "all_covered", "miss_free", "truncated", "token", "kcap",
+                 "export_limit", "_rows", "_req_ix")
+
+    def __init__(self, requests: List[JobRequest],
+                 rows: List[Optional[List[Tuple[int, float, float]]]],
+                 covered: np.ndarray, req_ix: dict, token: tuple, kcap: int,
+                 export_limit: Optional[int] = None):
+        self.requests = requests
+        self.covered = covered
+        self.all_covered = bool(covered.all()) if len(covered) else False
+        # set by the engine at build: True when no interned atom can MISS
+        # (all covered AND the state spans the full id space), letting the
+        # drain skip the per-segment MISS scan outright
+        self.miss_free = False
+        self.token = token
+        self.export_limit = export_limit
+        self._rows = rows
+        self._req_ix = req_ix
+        # per-atom "any candidate at all": rows of candidate-free atoms can
+        # never match (the liveness analogue), so the engine matches only the
+        # complement and dead traffic rides through at gather speed
+        self.has_cand = np.array([bool(r) for r in rows], dtype=bool)
+        self.has_cand_list = self.has_cand.tolist()
+        self.remaining = np.array(
+            [max(0, r.demand - r.granted) for r in requests], dtype=np.int64)
+        self._lower(kcap)
+
+    # ------------------------------------------------------------------ build
+
+    @classmethod
+    def from_scheduler(cls, sched, token: tuple, kcap: int = 32,
+                       export_limit: Optional[int] = None) -> "MatchState":
+        slots = sched.export_match_slots(export_limit)
+        A = len(slots)
+        requests: List[JobRequest] = []
+        req_ix = {}
+        rows: List[Optional[List[Tuple[int, float, float]]]] = []
+        covered = np.zeros(A, dtype=bool)
+        for aid, sl in enumerate(slots):
+            if sl is None:
+                rows.append(None)
+                continue
+            covered[aid] = True
+            row = []
+            for req, lo, hi in sl:
+                j = req_ix.get(id(req))
+                if j is None:
+                    j = req_ix[id(req)] = len(requests)
+                    requests.append(req)
+                row.append((j, lo, hi))
+            rows.append(row)
+        return cls(requests, rows, covered, req_ix, token, kcap, export_limit)
+
+    def _lower(self, kcap: int) -> None:
+        """Lower the candidate rows into dense ``(A, K)`` arrays with
+        ``K = min(kcap, longest row)``; rows cut by the cap mark their atom
+        truncated (the engine's expand-and-rematch cue)."""
+        rows = self._rows
+        A = len(rows)
+        kmax = max([len(r) for r in rows if r] or [1])
+        K = min(kcap, kmax)
+        self.kcap = K if kmax > K else kmax
+        cand_req = np.full((A, max(K, 1)), -1, dtype=np.int64)
+        cand_lo = np.zeros((A, max(K, 1)))
+        cand_hi = np.zeros((A, max(K, 1)))
+        truncated = np.zeros(A, dtype=bool)
+        for aid, row in enumerate(rows):
+            if not row:
+                continue
+            cut = row[:K]
+            cand_req[aid, :len(cut)] = [r[0] for r in cut]
+            cand_lo[aid, :len(cut)] = [r[1] for r in cut]
+            cand_hi[aid, :len(cut)] = [r[2] for r in cut]
+            # a row at the export limit may itself be a cut prefix: treat it
+            # as truncated so exhaustion triggers a wider re-export
+            truncated[aid] = len(row) > K or (
+                self.export_limit is not None
+                and len(row) >= self.export_limit)
+        self.cand_req = cand_req
+        self.cand_lo = cand_lo
+        self.cand_hi = cand_hi
+        self.truncated = truncated
+
+    def expand(self) -> bool:
+        """Double the candidate cap (after a truncated row exhausted its
+        prefix).  Returns False when the *stored* rows cannot widen K any
+        further — rows still marked truncated then are export-cap prefixes,
+        and the caller must re-export wider (``NeedWiderExport``)."""
+        if not self.truncated.any():
+            return False
+        kmax = max((len(r) for r in self._rows if r), default=1)
+        if self.kcap >= kmax:
+            return False
+        self._lower(self.kcap * 2)
+        return True
+
+    # ------------------------------------------------------------------- api
+
+    @property
+    def num_atoms(self) -> int:
+        return len(self.covered)
+
+    @property
+    def num_requests(self) -> int:
+        return len(self.requests)
+
+    def first_miss(self, atom_ids: np.ndarray) -> int:
+        """Index of the first check-in whose atom the state does not cover
+        (relative to ``atom_ids``), or ``-1`` if every atom is covered.
+
+        Ids beyond the state's atom range count as uncovered: they were
+        interned after the plan compiled, the definition of a MISS."""
+        A = self.num_atoms
+        miss = (atom_ids >= A) | ~self.covered[np.minimum(atom_ids, A - 1)] \
+            if A else np.ones(len(atom_ids), dtype=bool)
+        idx = np.argmax(miss)
+        if not miss[idx]:
+            return -1
+        return int(idx)
+
+    def consume(self, req_index: int) -> None:
+        """Mirror one applied grant (the array analogue of the dispatch
+        table's lazy filled-slot invalidation)."""
+        self.remaining[req_index] -= 1
+
+    def request_index(self, req: JobRequest) -> Optional[int]:
+        """Index of ``req`` in this state (None if unknown — e.g. a request
+        surfaced by a mid-segment replan; caller must invalidate)."""
+        return self._req_ix.get(id(req))
+
+
+class SupplyRings:
+    """Read-only struct-of-arrays view of a supply estimator's ring buffers.
+
+    Stacks the per-atom ``(nb,)`` bucket rings into one ``(A, nb)`` matrix and
+    evaluates the window eviction as a broadcast mask, so the all-atom rate
+    vector is a single array pass.  Values are bit-identical to per-atom
+    ``rate_id`` calls; unlike ``SupplyEstimator.snapshot_rates`` the view does
+    not write the eviction back (the estimator's lazy eviction remains the
+    source of truth).
+    """
+
+    __slots__ = ("counts", "totals", "next_evict", "nb", "window", "bucket",
+                 "prior_rate", "t0", "now")
+
+    def __init__(self, counts: np.ndarray, totals: np.ndarray,
+                 next_evict: np.ndarray, nb: int, window: float,
+                 bucket: float, prior_rate: float, t0: Optional[float],
+                 now: float):
+        self.counts = counts
+        self.totals = totals
+        self.next_evict = next_evict
+        self.nb = nb
+        self.window = window
+        self.bucket = bucket
+        self.prior_rate = prior_rate
+        self.t0 = t0
+        self.now = now
+
+    @classmethod
+    def from_estimator(cls, est: SupplyEstimator) -> "SupplyRings":
+        n = len(est._totals)
+        counts = (np.stack(est._counts) if n
+                  else np.zeros((0, est._nb), dtype=np.int64))
+        return cls(counts,
+                   np.asarray(est._totals, dtype=np.int64),
+                   np.asarray(est._next_evict, dtype=np.int64),
+                   est._nb, est.window, est.bucket, est.prior_rate,
+                   est._t0, est._now)
+
+    def rates(self) -> np.ndarray:
+        """All-atom rate vector (``prior_rate`` where the window is empty).
+        Eviction math is shared with the estimator
+        (:func:`repro.core.supply.window_evicted_totals`), applied here
+        without write-back."""
+        A = len(self.totals)
+        if A == 0:
+            return np.zeros(0)
+        horizon_excl = int(math.ceil((self.now - self.window) / self.bucket))
+        totals, _, _, _ = window_evicted_totals(
+            self.counts, self.totals, self.next_evict, self.nb, horizon_excl)
+        t0 = self.t0 if self.t0 is not None else 0.0
+        span = min(self.window, max(self.now - t0, self.bucket))
+        return np.where(totals > 0, totals / span, self.prior_rate)

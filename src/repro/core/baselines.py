@@ -33,6 +33,7 @@ scans.
 """
 from __future__ import annotations
 
+import math
 import random
 from typing import Dict, List, Optional
 
@@ -53,6 +54,9 @@ class BaseScheduler:
         self.index = EligibilityIndex([])
         # atom id -> pending requests eligible for that atom, in service order
         self._atom_cache: Dict[int, List[JobRequest]] = {}
+        # bumps whenever the pending order (hence per-atom candidate lists)
+        # changes — the array engine's cue to rebuild its state mirror
+        self.order_version = 0
 
     # ---- simulator hooks --------------------------------------------------
 
@@ -61,12 +65,14 @@ class BaseScheduler:
         self.pending.append(request)
         self._resort(now)
         self._atom_cache.clear()
+        self.order_version += 1
 
     def on_complete(self, request: JobRequest, now: float) -> None:
         if request in self.pending:
             self.pending.remove(request)
         self._resort(now)
         self._atom_cache.clear()
+        self.order_version += 1
 
     def assign(self, device: Device, now: float) -> Optional[JobRequest]:
         return self.checkin(self.index.atom_id_of(device), 0.0, 0.0,
@@ -111,6 +117,37 @@ class BaseScheduler:
     def _eligible_pending(self, atom_id: int) -> List[JobRequest]:
         key = self.index.key_of(atom_id)
         return [r for r in self.pending if r.requirement.name in key]
+
+    # ---- array-engine hooks -----------------------------------------------
+
+    def prepare_match(self, now: float) -> None:
+        """Baselines keep no lazily-compiled plan — nothing to refresh."""
+
+    def match_token(self) -> tuple:
+        """Identity of the current decision state (candidate lists change
+        only when the atom partition refines or the pending order changes)."""
+        return (self.index.version, self.order_version)
+
+    def export_match_slots(self, limit: Optional[int] = None):
+        """Per-atom candidate slots for the array engine, mirroring
+        ``checkin``: every pending request eligible for the atom, in service
+        order, with no speed band (``limit`` caps each exported prefix —
+        with an early exit, so a capped rebuild is O(atoms x limit), not
+        O(atoms x pending)).  Baselines cover every interned atom."""
+        inf = math.inf
+        key_of = self.index.key_of
+        pending = self.pending
+        out = []
+        for aid in range(self.index.num_atoms):
+            key = key_of(aid)
+            row = []
+            for r in pending:
+                if r.requirement.name in key:
+                    row.append((r, -inf, inf))
+                    if limit is not None and len(row) >= limit:
+                        break
+            out.append(row)
+        return out
 
     # ---- per-scheduler ordering -------------------------------------------
 

@@ -100,6 +100,18 @@ class EligibilityIndex:
                 mat[:, j] = arr
         sat = (mat[:, None, :] >= self._mins[None, :, :]).all(axis=2)  # (n, R)
         names = [r.name for r in self.requirements]
+        if R <= 16:
+            # encode each satisfaction row as one small int and intern via a
+            # dense 2^R LUT filled from a bincount: O(n), no sort at all
+            # (realized codes are visited ascending, matching the sorted
+            # order of the unique path bit for bit)
+            codes = sat @ (np.int64(1) << np.arange(R, dtype=np.int64))
+            counts = np.bincount(codes, minlength=1 << R)
+            lut = np.empty(1 << R, dtype=np.int64)
+            for code in np.flatnonzero(counts).tolist():
+                key = frozenset(nm for b, nm in enumerate(names) if code >> b & 1)
+                lut[code] = self.intern(key)
+            return lut[codes]
         if R <= 63:
             # encode each satisfaction row as one int: 1D unique is far
             # cheaper than the axis=0 structured-view path

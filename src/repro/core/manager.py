@@ -162,6 +162,38 @@ class VennScheduler(BaseScheduler):
         self.supply.record(atom, now)
         return self.checkin(device.atom_id, 0.0, 0.0, device.speed, now)
 
+    # ---------------------------------------------------- array-engine hooks
+
+    def prepare_match(self, now: float) -> None:
+        """Make the compiled decision state current (lazy replan), exactly as
+        the first ``checkin`` of a drain segment would."""
+        if self._plan_dirty:
+            self._reschedule(now)
+
+    def match_token(self) -> tuple:
+        """Identity of the current decision state: changes whenever the atom
+        partition refines or VENN-SCHED recompiles the dispatch table."""
+        return (self.index.version, self.sched_invocations)
+
+    def export_match_slots(self, limit: Optional[int] = None):
+        """Per-atom candidate slots for the array engine: ``None`` marks an
+        atom the compiled plan does not cover (the check-in must take the
+        scalar ``checkin`` path, which replans — the MISS protocol).
+
+        ``limit`` caps each atom's exported prefix: a check-in scans its
+        atom's list only until the first live band-accepting slot, so the
+        engine rarely needs more than a few entries, and exporting prefixes
+        keeps the per-replan mirror rebuild O(atoms x limit) instead of
+        O(atoms x pending jobs).  The engine detects prefix exhaustion and
+        re-exports wider."""
+        if limit is None:
+            return [s if s is None else
+                    [(slot[0], slot[1], slot[2]) for slot in s]
+                    for s in self.dispatch._slots]
+        return [s if s is None else
+                [(slot[0], slot[1], slot[2]) for slot in s[:limit]]
+                for s in self.dispatch._slots]
+
     def _absorb_feed(self, now: float) -> None:
         """Batch-record fed check-ins with time <= now into the estimator."""
         if self._feed_times is None or self._feed_pos >= len(self._feed_times):
@@ -181,12 +213,18 @@ class VennScheduler(BaseScheduler):
         self._plan_dirty = False
         self._absorb_feed(now)
         self.supply.advance(now)
-        atoms = set(self.supply.known_atoms())
+        # one batched eviction+rate pass over the stacked supply rings
+        # (bit-identical to per-atom rate() calls, without the per-replan
+        # per-atom ring traffic)
+        seen, rates = self.supply.snapshot_rates()
+        key_of = self.index.interner.key_of
+        id_of = self.index.interner.id_of
+        atoms = {key_of(aid) for aid in np.flatnonzero(seen).tolist()}
         # make sure every group's requirement defines atoms even pre-traffic
         active_groups = [g for g in self.groups.values() if g.pending_jobs()]
         for g in active_groups:
             g.eligible_atoms = self.index.eligible_atoms(g.requirement, atoms)
-            g.atom_rates = {a: self.supply.rate(a) for a in g.eligible_atoms}
+            g.atom_rates = {a: float(rates[id_of(a)]) for a in g.eligible_atoms}
             g.supply = sum(g.atom_rates.values())
             g.allocation = {}
 

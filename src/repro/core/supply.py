@@ -38,6 +38,34 @@ AtomKey = FrozenSet[str]
 DAY = 24 * 3600.0
 
 
+def window_evicted_totals(counts: np.ndarray, totals: np.ndarray,
+                          next_evict: np.ndarray, nb: int,
+                          horizon_excl: int):
+    """Vectorized window eviction over stacked rings (pure function — the
+    single home of the eviction-mask math, shared by the write-back
+    ``SupplyEstimator.snapshot_rates`` and the read-only
+    :class:`repro.accel.state.SupplyRings` view).
+
+    Returns ``(new_totals, whole, part, mask)``: per-atom totals after
+    evicting buckets in ``[next_evict, horizon_excl)``, the whole-ring-stale
+    mask, the partial-eviction mask, and the ``(A, nb)`` ring-slot mask of
+    evicted positions (None when no ring is partially stale).  Ring slots
+    ``(pos - ne) % nb < gap`` are exactly the buckets ``_evict_id`` zeroes
+    one by one."""
+    gap = horizon_excl - next_evict
+    whole = gap >= nb
+    part = (gap > 0) & ~whole
+    new_totals = totals.copy()
+    mask = None
+    if part.any():
+        pos = np.arange(nb, dtype=np.int64)
+        mask = part[:, None] & (
+            (pos[None, :] - next_evict[:, None]) % nb < gap[:, None])
+        new_totals = new_totals - (counts * mask).sum(axis=1)
+    new_totals[whole] = 0
+    return new_totals, whole, part, mask
+
+
 class SupplyEstimator:
     """Sliding-window per-atom check-in rate estimator.
 
@@ -111,8 +139,9 @@ class SupplyEstimator:
             if len(babs) == 0:
                 return
         bidx = babs % self._nb
-        for aid in np.unique(atom_ids):
-            aid = int(aid)
+        # dense ids: bincount finds the realized atoms without sorting the
+        # whole batch (ascending, like np.unique — same ring-growth order)
+        for aid in np.flatnonzero(np.bincount(atom_ids)).tolist():
             self._evict_id(aid)
             sel = atom_ids == aid
             # a batch spans few buckets (replan intervals ≪ window), so
@@ -159,6 +188,39 @@ class SupplyEstimator:
         t0 = self._t0 if self._t0 is not None else 0.0
         span = min(self.window, max(self._now - t0, self.bucket))
         return n / span
+
+    def snapshot_rates(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Vectorized all-atom rate snapshot: ``(seen, rates)`` arrays over
+        dense atom ids (``seen[aid]`` iff the window holds traffic for it).
+
+        One batched eviction pass over the stacked rings replaces the
+        per-atom ``_evict_id`` + ``rate_id`` loop the scheduler replan used
+        to run; values are bit-identical to the scalar path (same eviction
+        set, same span).  Eviction is written back, so the scalar paths stay
+        consistent with the snapshot."""
+        n = len(self._totals)
+        if n == 0:
+            return np.zeros(0, dtype=bool), np.zeros(0)
+        horizon_excl = int(math.ceil((self._now - self.window) / self.bucket))
+        ne = np.asarray(self._next_evict, dtype=np.int64)
+        if (horizon_excl > ne).any():
+            counts = np.stack(self._counts)                 # (A, nb)
+            totals, whole, part, mask = window_evicted_totals(
+                counts, np.asarray(self._totals, dtype=np.int64), ne,
+                self._nb, horizon_excl)
+            if mask is not None:
+                counts[mask] = 0
+            counts[whole] = 0
+            for aid in np.flatnonzero(whole | part).tolist():   # write back
+                self._counts[aid][:] = counts[aid]
+                self._totals[aid] = int(totals[aid])
+                self._next_evict[aid] = horizon_excl
+        totals = np.asarray(self._totals, dtype=np.int64)
+        t0 = self._t0 if self._t0 is not None else 0.0
+        span = min(self.window, max(self._now - t0, self.bucket))
+        seen = totals > 0
+        rates = np.where(seen, totals / span, self.prior_rate)
+        return seen, rates
 
     def rate_of_atoms(self, atoms: Iterable[AtomKey]) -> float:
         """|S_j|: aggregate eligible rate over a union of atoms."""

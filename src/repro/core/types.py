@@ -88,9 +88,14 @@ class JobStatus(Enum):
     DONE = "done"
 
 
-@dataclass
+@dataclass(eq=False)
 class JobRequest:
-    """One round's resource request (demand + spec), the schedulable unit."""
+    """One round's resource request (demand + spec), the schedulable unit.
+
+    Identity semantics (``eq=False``): a request is the same request only if
+    it is the same object — the schedulers' ``pending`` lists and the
+    simulator's stale-entry checks all mean identity, and dataclass
+    field-wise ``__eq__`` made every ``list.remove`` a deep compare."""
 
     job: "Job"
     round_index: int
@@ -112,16 +117,20 @@ class JobRequest:
 
     @property
     def remaining(self) -> int:
-        return max(0, self.demand - self.granted)
+        d = self.demand - self.granted
+        return d if d > 0 else 0
 
     @property
     def requirement(self) -> Requirement:
         return self.job.requirement
 
 
-@dataclass
+@dataclass(eq=False)
 class Job:
-    """A synchronous collaborative-learning job (a sequence of rounds)."""
+    """A synchronous collaborative-learning job (a sequence of rounds).
+
+    Identity semantics (``eq=False``), consistent with the job_id ``__hash__``
+    below: group membership tests are identity tests, not deep compares."""
 
     job_id: int
     requirement: Requirement
@@ -155,8 +164,10 @@ class Job:
     @property
     def remaining_demand(self) -> int:
         """Remaining demand of the *current request* (§4.2.1 default)."""
-        if self.current is not None:
-            return self.current.remaining
+        r = self.current
+        if r is not None:
+            d = r.demand - r.granted
+            return d if d > 0 else 0
         return self.demand_per_round
 
     @property
@@ -198,7 +209,10 @@ class JobGroup:
         return sum(self.allocation.values())
 
     def pending_jobs(self) -> List[Job]:
-        return [j for j in self.jobs if j.current is not None and j.current.remaining > 0]
+        # hot on every replan (called a few times over every job in the
+        # group): inline the request-remaining check
+        return [j for j in self.jobs
+                if (r := j.current) is not None and r.demand > r.granted]
 
 
 # --------------------------------------------------------------------------- #

@@ -118,8 +118,20 @@ class GraphCost:
                          self.bytes_accessed + other.bytes_accessed, c)
 
 
-def graph_cost(compiled) -> GraphCost:
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """Normalize ``compiled.cost_analysis()`` across jaxlib versions.
+
+    Older jaxlib returns a one-element list of per-program dicts; newer
+    returns the dict directly (and ``None`` when analysis is unavailable).
+    """
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
+def graph_cost(compiled) -> GraphCost:
+    ca = cost_analysis_dict(compiled)
     return GraphCost(
         flops=float(ca.get("flops", 0.0)),
         bytes_accessed=float(ca.get("bytes accessed", 0.0)),

@@ -48,6 +48,10 @@ def build_parser() -> argparse.ArgumentParser:
     run.add_argument("--record", default=None, metavar="PATH",
                      help="record the first run's device stream to a trace "
                           "file (.csv or .jsonl)")
+    run.add_argument("--engine", choices=("python", "array"), default="python",
+                     help="simulator drain engine: per-device scalar loop or "
+                          "batched array matching (repro.accel) — identical "
+                          "metrics, different wall-clock")
 
     rep = sub.add_parser("replay", help="run a scenario's jobs over a "
                                         "recorded device trace")
@@ -56,6 +60,7 @@ def build_parser() -> argparse.ArgumentParser:
     rep.add_argument("--sched", type=_scheds, default=list(DEFAULT_SCHEDS))
     rep.add_argument("--seeds", type=_seeds, default=[0])
     rep.add_argument("--fast", action="store_true")
+    rep.add_argument("--engine", choices=("python", "array"), default="python")
     return p
 
 
@@ -86,7 +91,7 @@ def main(argv: Optional[List[str]] = None) -> int:
             try:
                 results = run_scenario(spec, scheds=args.sched,
                                        seeds=args.seeds, fast=args.fast,
-                                       record=record)
+                                       record=record, engine=args.engine)
             except ValueError as e:
                 print(f"error: {e}", file=sys.stderr)
                 return 2
@@ -98,7 +103,8 @@ def main(argv: Optional[List[str]] = None) -> int:
     if args.cmd == "replay":
         spec = get_scenario(args.name)
         results = run_scenario(spec, scheds=args.sched, seeds=args.seeds,
-                               fast=args.fast, replay=args.trace)
+                               fast=args.fast, replay=args.trace,
+                               engine=args.engine)
         print(f"\n== {spec.name} (replay: {args.trace}) ==")
         print(comparison_table(results))
         return 0

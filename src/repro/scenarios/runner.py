@@ -57,12 +57,15 @@ def fast_scaled(spec: ScenarioSpec) -> ScenarioSpec:
 
 def run_one(spec: ScenarioSpec, sched_name: str, seed: int,
             record: Optional[str] = None,
-            replay: Optional[str] = None) -> RunResult:
+            replay: Optional[str] = None,
+            engine: Optional[str] = None) -> RunResult:
     """One (scenario, scheduler, seed) simulation.
 
     ``record`` dumps this run's device stream to a trace file; ``replay``
     substitutes a trace file for the scenario's synthetic stream (the job
-    side still comes from the spec)."""
+    side still comes from the spec).  ``engine`` selects the simulator's
+    drain engine (``"python"`` scalar loop or ``"array"`` batched matching —
+    identical metrics, different wall-clock)."""
     jobs = build_jobs(spec, seed)
     if replay is not None:
         # seed drives synthesized randomness for traces that omit the
@@ -73,7 +76,7 @@ def run_one(spec: ScenarioSpec, sched_name: str, seed: int,
     if record is not None:
         stream = RecordingStream(stream, record)
     sched = SCHEDULERS[sched_name](seed=seed)
-    sim = Simulator(jobs, sched, cfg=spec.sim, stream=stream)
+    sim = Simulator(jobs, sched, cfg=spec.sim, stream=stream, engine=engine)
     t0 = time.time()
     try:
         metrics = sim.run()
@@ -91,7 +94,8 @@ def run_one(spec: ScenarioSpec, sched_name: str, seed: int,
 def run_scenario(spec_or_name, scheds: Sequence[str] = DEFAULT_SCHEDS,
                  seeds: Sequence[int] = (0,), fast: bool = False,
                  record: Optional[str] = None,
-                 replay: Optional[str] = None) -> List[RunResult]:
+                 replay: Optional[str] = None,
+                 engine: Optional[str] = None) -> List[RunResult]:
     """Run a scenario across schedulers × seeds.
 
     With ``record``, the first scheduler's run is recorded.  The device
@@ -114,7 +118,8 @@ def run_scenario(spec_or_name, scheds: Sequence[str] = DEFAULT_SCHEDS,
         for seed in seeds:
             results.append(run_one(
                 spec, sched_name, seed,
-                record=record if first else None, replay=replay))
+                record=record if first else None, replay=replay,
+                engine=engine))
             first = False
     return results
 

@@ -25,20 +25,31 @@ struct-of-arrays chunks (:class:`~repro.sim.devices.DeviceChunk`) pulled from
 any :class:`~repro.sim.devices.ChunkStream` (synthetic generator, scenario
 stream, or trace replay) and merged against the heap by timestamp.  Each chunk
 is classified to interned atom ids in one vectorized pass (re-classified in
-place if the scheduler's requirement set grows mid-chunk), handed to the
-scheduler via ``begin_chunk`` (which batch-feeds the supply estimator), and
-then each check-in is a single ``sched.checkin`` call; a ``Device`` object is
-only materialized for granted check-ins.  While no request is outstanding the
-cursor skips straight to the next control event, and while the scheduler's
-liveness bitmap marks a check-in's atom *dead* (no pending request can accept
-it — e.g. during tiered phases) the check-in is skipped without a scheduler
-call at all.
+place if the scheduler's requirement set grows mid-chunk) and handed to the
+scheduler via ``begin_chunk`` (which batch-feeds the supply estimator).  Two
+interchangeable **drain engines** then consume the merged stream:
+
+* ``engine=None``/``"python"`` — the scalar fast path: one ``sched.checkin``
+  per live check-in.  While no request is outstanding the cursor skips
+  straight to the next control event, and while the scheduler's liveness
+  bitmap marks a check-in's atom *dead* the check-in is skipped without a
+  scheduler call at all.
+* ``engine="array"`` — the :mod:`repro.accel` engine: whole drain segments
+  (check-in runs between control events) are matched in one vectorized call
+  against a struct-of-arrays mirror of the scheduler state, and only granted
+  rows touch Python objects.  Grant sequences and metrics are bit-identical
+  to the scalar path; uncovered atoms fall back to one scalar ``checkin``
+  (the MISS/replan protocol).
+
+Either way a ``Device`` object is only materialized for granted check-ins,
+and all grant side effects flow through the shared :meth:`Simulator._grant`.
 """
 from __future__ import annotations
 
 import heapq
 import itertools
 import math
+import time
 from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
@@ -65,7 +76,9 @@ class Simulator:
     def __init__(self, jobs: List[Job], scheduler: BaseScheduler,
                  population: Optional[PopulationConfig] = None,
                  cfg: Optional[SimConfig] = None,
-                 stream: Optional[ChunkStream] = None):
+                 stream: Optional[ChunkStream] = None,
+                 engine: Optional[str] = None,
+                 record_grants: bool = False):
         self.jobs = jobs
         self.sched = scheduler
         self.cfg = cfg or SimConfig()
@@ -78,12 +91,27 @@ class Simulator:
                 raise ValueError("pass either population or stream, not both")
             self.devgen = getattr(stream, "gen", None)
         self.stream = stream
+        if engine in (None, "python"):
+            self.engine = None
+        elif engine == "array":
+            from ..accel.engine import ArrayMatchEngine
+            self.engine = ArrayMatchEngine()
+        else:
+            raise ValueError(f"unknown engine {engine!r} "
+                             "(expected 'python' or 'array')")
+        # optional (time, job_id, round_index) log of every grant, for
+        # engine-equivalence tests and debugging
+        self.grant_log: Optional[list] = [] if record_grants else None
         self._seq = itertools.count()
         self._heap: List[Tuple[float, int, int, object]] = []
         self.metrics = SimMetrics()
         self.now = 0.0
         self.checkins_seen = 0        # check-ins examined by the scheduler
         self.checkins_skipped = 0     # check-ins skipped (idle or dead atom)
+        self.drain_seconds = 0.0      # wall time in the drain engine (the
+        #                               check-in matching loop, per engine)
+        self.stream_seconds = 0.0     # wall time producing + classifying
+        #                               chunks (shared, engine-independent)
 
     # ------------------------------------------------------------------ api
 
@@ -101,32 +129,62 @@ class Simulator:
         heappop = heapq.heappop
         max_time = self.cfg.max_time
         n_jobs = len(self.jobs)
+        drain = self._drain_array if self.engine is not None \
+            else self._drain_python
+        perf = time.perf_counter
+        while self._done < n_jobs:
+            # ---- drain device check-ins until the heap takes priority ----
+            t0 = perf()
+            stopped = drain(max_time)
+            self.drain_seconds += perf() - t0
+            if stopped:
+                break                   # a check-in crossed max_time
+            # ---- one control event ----
+            if not heap:
+                break
+            t, _, kind, payload = heappop(heap)
+            if t > max_time:
+                break
+            self.now = t
+            if kind == JOB_ARRIVAL:
+                self._on_job_arrival(payload)           # type: ignore[arg-type]
+            elif kind == RESPONSE:
+                self._pop_response(payload)             # type: ignore[arg-type]
+            elif kind == DEADLINE:
+                self._on_deadline(payload)              # type: ignore[arg-type]
+        self.metrics.finalize(self.jobs, self.now)
+        return self.metrics
+
+    # --------------------------------------------------- drain: scalar path
+
+    def _drain_python(self, max_time: float) -> bool:
+        """Per-check-in drain until the next control event takes priority.
+        Returns True when a check-in crossed ``max_time`` (simulation stop).
+
+        The check-in scan is inlined (it runs millions of times per simulated
+        month); grant side effects go through the shared ``_grant``."""
+        heap = self._heap
         sched = self.sched
         sched_checkin = sched.checkin
         sched_live = sched.live_atoms
         index = sched.index
-        heappush = heapq.heappush
-        next_seq = self._seq.__next__
-        fail_base = self.stream.fail_base
-        fail_boost = self.stream.fail_slow_boost
-        rt_from, f_from = response_time_from, fails_from
+        grant = self._grant
         inf = math.inf
-        stop = False
-        while not stop and self._done < n_jobs:
-            # ---- drain device check-ins until the heap takes priority ----
-            # (the grant path is inlined: at realistic rates it runs hundreds
-            # of thousands of times per simulated month)
+        while True:
+            if self._chunk is None:
+                return False
             # the atom partition only refines inside on_request (a heap
             # event), so one version check per drain segment suffices
-            if self._chunk is not None and index.version != self._chunk_version:
+            if index.version != self._chunk_version:
                 self._classify_chunk(self._chunk, self._cursor)
             times, cpu, mem = self._times, self._cpu, self._mem
-            spd, rz, fu, aids = self._speed, self._resp_z, self._fail_u, self._aids
+            spd, aids = self._speed, self._aids
             n_times = len(times)
             cursor = self._cursor
             seg_start = cursor
             seg_dead = 0
             last_t = None
+            stop = False
             # liveness bitmap: None while the plan is dirty (first checkin
             # replans; we refresh once after it).  The list object is mutated
             # in place by the scheduler across mid-drain replans.
@@ -151,8 +209,7 @@ class Simulator:
                     self.checkins_skipped += seg_dead
                     self._skip_idle(min(heap_t, max_time))
                     times, cpu, mem = self._times, self._cpu, self._mem
-                    spd, rz, fu = self._speed, self._resp_z, self._fail_u
-                    aids = self._aids
+                    spd, aids = self._speed, self._aids
                     n_times = len(times)
                     cursor = self._cursor
                     seg_start = cursor
@@ -182,33 +239,7 @@ class Simulator:
                 if (req is None or req.granted >= req.demand
                         or req.complete_time is not None):
                     continue                           # device leaves unused
-                self.now = dev_t
-                dev = Device(caps={"cpu": cpu[i], "mem": mem[i]}, speed=speed,
-                             checkin_time=dev_t, atom_id=aid)
-                req.granted += 1
-                if req.granted >= req.demand:
-                    self._open -= 1
-                job = req.job
-                if job.first_service_time is None:
-                    job.first_service_time = dev_t
-                rt = rt_from(speed, rz[i], job.task_time_mean,
-                             job.task_time_sigma)
-                ok = not f_from(speed, fu[i], fail_base, fail_boost)
-                t_resp = dev_t + rt
-                buf = req.resp_buf
-                if buf is None:
-                    buf = req.resp_buf = []
-                heappush(buf, (t_resp, next_seq(), dev, rt, ok))
-                if t_resp < req.resp_t:
-                    # arm (or re-arm earlier) the request's single RESPONSE
-                    # entry; a previously armed later entry goes stale
-                    req.resp_t = t_resp
-                    heappush(heap, (t_resp, next_seq(), RESPONSE, req))
-                if req.granted >= req.demand and req.alloc_complete_time is None:
-                    req.alloc_complete_time = dev_t    # scheduling delay ends
-                    job.status = JobStatus.COLLECTING
-                    heappush(heap, (dev_t + job.deadline, next_seq(),
-                                    DEADLINE, req))
+                grant(req, i, dev_t, speed)
                 heap_t = heap[0][0]
             self._cursor = cursor
             self.checkins_seen += cursor - seg_start - seg_dead
@@ -217,28 +248,207 @@ class Simulator:
                 self.now = last_t       # ungranted check-ins don't store
                 #                         self.now each step; sync at seg end
             if stop:
-                break
+                return True
             if cursor >= n_times and self._chunk is not None:
                 self._load_next_chunk()
                 if self._chunk is not None:
                     continue
-            # ---- one control event ----
-            if not heap:
+            return False
+
+    # ---------------------------------------------------- drain: array path
+
+    def _drain_array(self, max_time: float) -> bool:
+        """Batched drain (``engine="array"``): match whole segments of
+        check-ins in one :mod:`repro.accel` call, then apply grants in time
+        order, truncating exactly where a newly armed control event (or a
+        fill that empties ``_open``) would have preempted the scalar loop.
+        Outcomes are bit-identical to ``_drain_python``."""
+        from ..accel.engine import (NeedWiderExport, SCALAR_SEG_ROWS,
+                                    SEG_ROWS)
+        heap = self._heap
+        engine = self.engine
+        sched = self.sched
+        index = sched.index
+        grant = self._grant
+        inf = math.inf
+        while True:
+            if self._chunk is None:
+                return False
+            if index.version != self._chunk_version:
+                self._classify_chunk(self._chunk, self._cursor)
+            times = self._times
+            cursor = self._cursor
+            if cursor >= len(times):
+                self._load_next_chunk()
+                if self._chunk is None:
+                    return False
+                continue
+            heap_t = heap[0][0] if heap else inf
+            dev_t = times[cursor]
+            if heap_t < dev_t:
+                return False                    # control event first
+            if dev_t > max_time:
+                return True                     # simulation stop
+            if not self._open:
+                self._skip_idle(min(heap_t, max_time))
+                continue
+            ck = self._chunk
+            bound = heap_t if heap_t < max_time else max_time
+            hi = int(np.searchsorted(ck.times, bound, side="right"))
+            if hi > cursor + SEG_ROWS:          # bound the dense working set
+                hi = cursor + SEG_ROWS
+            # scheduler's lazy replan runs at the first check-in's time,
+            # exactly when the scalar path's first checkin would trigger it
+            state = engine.prepare(sched, dev_t)
+            aids_np = ck.atom_ids
+            # classify() interns new atom ids for freshly realized capability
+            # combinations WITHOUT bumping index.version, so miss-freedom
+            # additionally requires the id space not to have grown since the
+            # state was built
+            if state.miss_free and index.num_atoms == state.num_atoms:
+                miss = -1                       # no atom can MISS: skip scan
+            else:
+                miss = state.first_miss(aids_np[cursor:hi])
+            if miss == 0:
+                # uncovered atom at the segment head: one scalar checkin,
+                # which replans mid-drain exactly like the scalar path
+                i = cursor
+                speed = self._speed[i]
+                req = sched.checkin(self._aids[i], self._cpu[i],
+                                    self._mem[i], speed, dev_t)
+                engine.invalidate()
+                self._cursor = i + 1
+                self.checkins_seen += 1
+                self.now = dev_t
+                if not (req is None or req.granted >= req.demand
+                        or req.complete_time is not None):
+                    grant(req, i, dev_t, speed)
+                continue
+            if miss > 0:
+                hi = cursor + miss
+            if hi - cursor < SCALAR_SEG_ROWS:
+                self._drain_array_scalar(state, cursor, hi, heap_t)
+                continue
+            try:
+                res = engine.match(aids_np[cursor:hi], ck.speed[cursor:hi])
+            except NeedWiderExport:
+                continue        # engine widened its cap: rebuild + re-match
+            choice = res.choice
+            seg_end = hi
+            top = heap_t
+            for p in np.flatnonzero(res.granted).tolist():
+                i = cursor + p
+                if i >= seg_end:
+                    break
+                t_i = times[i]
+                rix = int(choice[p])
+                filled = grant(state.requests[rix], i, t_i, self._speed[i])
+                state.consume(rix)
+                if filled and not self._open:
+                    # every outstanding request filled: the scalar loop
+                    # would idle-skip the rest of the segment
+                    seg_end = i + 1
+                    break
+                new_top = heap[0][0]
+                if new_top < top:
+                    # a grant armed an event earlier than the old segment
+                    # bound: check-ins after it belong to the next segment
+                    top = new_top
+                    cut = int(np.searchsorted(ck.times, new_top,
+                                              side="right"))
+                    if cut < seg_end:
+                        seg_end = cut
+            self._cursor = seg_end
+            self.checkins_seen += seg_end - cursor
+            self.now = times[seg_end - 1]
+
+    def _drain_array_scalar(self, state, cursor: int, hi: int,
+                            heap_t: float) -> None:
+        """Scalar tail of the array drain for segments too small to amortize
+        a vectorized match: per-row ``checkin`` with the state's candidate
+        bitmap standing in for the scheduler's liveness list (same dead-atom
+        set: covered atoms with no candidate slot; uncovered atoms were
+        bounded out by the MISS scan).  Grants are mirrored into the state so
+        later vectorized segments stay exact; if a grant surfaces a request
+        the state does not know (a mid-row replan), the state is invalidated
+        and the caller's next ``prepare`` rebuilds it."""
+        heap = self._heap
+        sched = self.sched
+        grant = self._grant
+        times, aids = self._times, self._aids
+        cpu, mem, spd = self._cpu, self._mem, self._speed
+        has_cand = state.has_cand_list
+        n_cov = len(has_cand)
+        top = heap_t
+        i = cursor
+        while i < hi:
+            t_i = times[i]
+            if top < t_i:
+                break                           # an armed event preempts
+            aid = aids[i]
+            if aid < n_cov and not has_cand[aid]:
+                i += 1                          # dead atom (state.covered
+                continue                        # holds: miss was bounded out)
+            speed = spd[i]
+            req = sched.checkin(aid, cpu[i], mem[i], speed, t_i)
+            i += 1
+            if (req is None or req.granted >= req.demand
+                    or req.complete_time is not None):
+                continue
+            filled = grant(req, i - 1, t_i, speed)
+            rix = state.request_index(req)
+            if rix is None:                     # request unknown to the
+                self.engine.invalidate()        # state (mid-row replan)
                 break
-            t, _, kind, payload = heappop(heap)
-            if t > max_time:
+            state.consume(rix)
+            if filled and not self._open:
                 break
-            self.now = t
-            if kind == JOB_ARRIVAL:
-                self._on_job_arrival(payload)           # type: ignore[arg-type]
-            elif kind == RESPONSE:
-                self._pop_response(payload)             # type: ignore[arg-type]
-            elif kind == DEADLINE:
-                self._on_deadline(payload)              # type: ignore[arg-type]
-        self.metrics.finalize(self.jobs, self.now)
-        return self.metrics
+            top = heap[0][0]
+        self._cursor = i
+        self.checkins_seen += i - cursor
+        self.now = times[i - 1]
 
     # ------------------------------------------------------------ internals
+
+    def _grant(self, req: JobRequest, i: int, dev_t: float, speed: float
+               ) -> bool:
+        """Apply one granted check-in (chunk row ``i`` at ``dev_t``):
+        materialize the ``Device``, arm its response, handle request fill.
+        The single place grant side effects happen — shared by both drain
+        engines.  Returns True iff the request just filled."""
+        self.now = dev_t
+        dev = Device(caps={"cpu": self._cpu[i], "mem": self._mem[i]},
+                     speed=speed, checkin_time=dev_t, atom_id=self._aids[i])
+        req.granted += 1
+        filled = req.granted >= req.demand
+        if filled:
+            self._open -= 1
+        job = req.job
+        if job.first_service_time is None:
+            job.first_service_time = dev_t
+        rt = response_time_from(speed, self._resp_z[i], job.task_time_mean,
+                                job.task_time_sigma)
+        ok = not fails_from(speed, self._fail_u[i], self.stream.fail_base,
+                            self.stream.fail_slow_boost)
+        t_resp = dev_t + rt
+        buf = req.resp_buf
+        if buf is None:
+            buf = req.resp_buf = []
+        heapq.heappush(buf, (t_resp, next(self._seq), dev, rt, ok))
+        if t_resp < req.resp_t:
+            # arm (or re-arm earlier) the request's single RESPONSE entry;
+            # a previously armed later entry goes stale
+            req.resp_t = t_resp
+            heapq.heappush(self._heap, (t_resp, next(self._seq), RESPONSE,
+                                        req))
+        if filled and req.alloc_complete_time is None:
+            req.alloc_complete_time = dev_t        # scheduling delay ends
+            job.status = JobStatus.COLLECTING
+            heapq.heappush(self._heap, (dev_t + job.deadline,
+                                        next(self._seq), DEADLINE, req))
+        if self.grant_log is not None:
+            self.grant_log.append((dev_t, job.job_id, req.round_index))
+        return filled
 
     def _push(self, t: float, kind: int, payload: object) -> None:
         heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
@@ -247,6 +457,13 @@ class Simulator:
 
     def _load_next_chunk(self) -> None:
         """Pull chunks from the stream until one has check-ins (or it ends)."""
+        t0 = time.perf_counter()
+        try:
+            self._load_next_chunk_inner()
+        finally:
+            self.stream_seconds += time.perf_counter() - t0
+
+    def _load_next_chunk_inner(self) -> None:
         self._chunk = None
         self._times = self._cpu = self._mem = []
         self._speed = self._resp_z = self._fail_u = self._aids = []
@@ -259,13 +476,31 @@ class Simulator:
             self._classify_chunk(ck, 0)
             self.sched.begin_chunk(ck.times, ck.atom_ids)
             self._chunk = ck
-            self._times = ck.times.tolist()
-            self._cpu = ck.cpu.tolist()
-            self._mem = ck.mem.tolist()
-            self._speed = ck.speed.tolist()
-            self._resp_z = ck.resp_z.tolist()
-            self._fail_u = ck.fail_u.tolist()
-            self._aids = ck.atom_ids.tolist()
+            if self.engine is None:
+                # scalar drain: Python-float list indexing is ~3x cheaper
+                # than NumPy scalar indexing on the per-device hot loop.
+                # The mirror conversion is engine-side work, not chunk
+                # production — back it out of stream_seconds so the
+                # drain-vs-stream split stays engine-comparable.
+                tm = time.perf_counter()
+                self._times = ck.times.tolist()
+                self._cpu = ck.cpu.tolist()
+                self._mem = ck.mem.tolist()
+                self._speed = ck.speed.tolist()
+                self._resp_z = ck.resp_z.tolist()
+                self._fail_u = ck.fail_u.tolist()
+                self._aids = ck.atom_ids.tolist()
+                self.stream_seconds -= time.perf_counter() - tm
+            else:
+                # array drain touches only segment boundaries and grants:
+                # the arrays serve directly, skipping the per-chunk tolist
+                self._times = ck.times
+                self._cpu = ck.cpu
+                self._mem = ck.mem
+                self._speed = ck.speed
+                self._resp_z = ck.resp_z
+                self._fail_u = ck.fail_u
+                self._aids = ck.atom_ids
             self._cursor = 0
             return
 
@@ -280,7 +515,8 @@ class Simulator:
             # and the drain loop's list mirror both see the new ids — even
             # when the whole chunk is still unprocessed (start == 0)
             ck.atom_ids[start:] = ids
-            self._aids[start:] = ids.tolist()
+            if type(self._aids) is list:        # array mode aliases the
+                self._aids[start:] = ids.tolist()   # chunk array directly
         self._chunk_version = self.sched.atom_version
 
     def _skip_idle(self, until: float) -> None:
@@ -398,5 +634,7 @@ class Simulator:
 def run_workload(jobs: List[Job], scheduler: BaseScheduler,
                  population: Optional[PopulationConfig] = None,
                  sim: Optional[SimConfig] = None,
-                 stream: Optional[ChunkStream] = None) -> SimMetrics:
-    return Simulator(jobs, scheduler, population, sim, stream=stream).run()
+                 stream: Optional[ChunkStream] = None,
+                 engine: Optional[str] = None) -> SimMetrics:
+    return Simulator(jobs, scheduler, population, sim, stream=stream,
+                     engine=engine).run()

@@ -1,0 +1,348 @@
+"""Array-native scheduler engine (repro.accel) tests.
+
+* fixed-point matcher vs the sequential oracle (randomized slots, tier
+  bands, capacities) — NumPy, JAX, and JAX+Pallas-kernel backends;
+* Pallas masked-first-fit kernel vs its pure-jnp oracle;
+* adaptive candidate-cap expansion (truncated rows re-match exactly);
+* supply-ring SoA views match the scalar estimator bit for bit;
+* end-to-end: Simulator(engine="array") produces identical grant sequences
+  and SimMetrics to the per-device loop on randomized workloads, for Venn
+  and the baselines.
+"""
+import math
+
+import numpy as np
+import pytest
+
+try:        # property tests run under hypothesis when present, and fall
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                               # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+from repro.accel.engine import (ArrayMatchEngine, match_chunk,
+                                match_chunk_jax, match_chunk_seq)
+from repro.accel.state import MatchState, SupplyRings
+from repro.core import SCHEDULERS, VennScheduler
+from repro.core.supply import SupplyEstimator
+from repro.sim import (JobTraceConfig, PopulationConfig, SimConfig,
+                       generate_jobs)
+from repro.sim.simulator import Simulator
+
+
+class FakeReq:
+    def __init__(self, demand, granted=0):
+        self.demand, self.granted = demand, granted
+
+
+class FakeSched:
+    def __init__(self, slots):
+        self._slots = slots
+
+    def export_match_slots(self, limit=None):
+        if limit is None:
+            return self._slots
+        return [s if s is None else s[:limit] for s in self._slots]
+
+
+def _random_state(rng, kcap=8, export_limit=None):
+    A = int(rng.integers(1, 6))
+    R = int(rng.integers(1, 8))
+    reqs = [FakeReq(int(rng.integers(1, 6))) for _ in range(R)]
+    slots = []
+    for _ in range(A):
+        if rng.uniform() < 0.1:
+            slots.append(None)
+            continue
+        row = []
+        for r in rng.permutation(R)[:int(rng.integers(0, R + 1))]:
+            if rng.uniform() < 0.3:
+                lo, hi = sorted(rng.uniform(0, 3, 2))
+            else:
+                lo, hi = -math.inf, math.inf
+            row.append((reqs[int(r)], float(lo), float(hi)))
+        slots.append(row)
+    return MatchState.from_scheduler(FakeSched(slots), token=("t",),
+                                     kcap=kcap, export_limit=export_limit)
+
+
+def _random_segment(rng, st_, n):
+    cov = np.flatnonzero(st_.covered)
+    if len(cov) == 0:
+        return None, None
+    aids = rng.choice(cov, size=n)
+    speeds = rng.uniform(0, 3, size=n)
+    return aids, speeds
+
+
+# ------------------------------------------------------ matcher vs oracle
+
+def _check_matcher_equals_oracle(seed: int, n: int) -> None:
+    rng = np.random.default_rng(seed)
+    state = _random_state(rng)
+    aids, speeds = _random_segment(rng, state, n)
+    if aids is None:
+        return
+    ref = match_chunk_seq(aids, speeds, state)
+    got = match_chunk(aids, speeds, state)
+    assert np.array_equal(ref.choice, got.choice)
+    assert np.array_equal(ref.granted, got.granted)
+
+
+@pytest.mark.parametrize("seed", range(40))
+def test_match_chunk_equals_sequential_oracle(seed):
+    _check_matcher_equals_oracle(seed, n=1 + 7 * seed % 80)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(0, 10_000), st.integers(1, 80))
+    def test_match_chunk_equals_sequential_oracle_hyp(seed, n):
+        _check_matcher_equals_oracle(seed, n)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+@pytest.mark.parametrize("seed", [0, 3, 11, 29])
+def test_jax_backend_equals_oracle(seed, use_kernel):
+    rng = np.random.default_rng(seed)
+    state = _random_state(rng)
+    aids, speeds = _random_segment(rng, state, 50)
+    if aids is None:
+        return
+    ref = match_chunk_seq(aids, speeds, state)
+    got = match_chunk_jax(aids, speeds, state, use_kernel=use_kernel)
+    assert np.array_equal(ref.choice, got.choice)
+    assert np.array_equal(ref.granted, got.granted)
+
+
+def test_masked_first_fit_kernel_matches_ref():
+    import jax.numpy as jnp
+
+    from repro.accel.kernels import masked_first_fit, masked_first_fit_ref
+    rng = np.random.default_rng(0)
+    for n, K in ((1, 1), (7, 3), (64, 5), (300, 17), (1024, 130)):
+        elig = rng.uniform(size=(n, K)) < 0.4
+        fill = rng.integers(-1, n + 1, size=(n, K)).astype(np.int32)
+        pos = np.arange(n, dtype=np.int32)
+        want = masked_first_fit_ref(jnp.asarray(elig.astype(np.int32)),
+                                    jnp.asarray(fill), jnp.asarray(pos))
+        got = masked_first_fit(jnp.asarray(elig.astype(np.int32)),
+                               jnp.asarray(fill), jnp.asarray(pos),
+                               interpret=True)
+        assert np.array_equal(np.asarray(want), np.asarray(got)), (n, K)
+
+
+# ------------------------------------------------------- state mechanics
+
+def test_state_capacity_depletes_in_priority_order():
+    r0, r1 = FakeReq(2), FakeReq(3)
+    state = MatchState.from_scheduler(
+        FakeSched([[(r0, -math.inf, math.inf), (r1, -math.inf, math.inf)]]),
+        token=("t",))
+    aids = np.zeros(6, dtype=np.int64)
+    speeds = np.ones(6)
+    res = match_chunk(aids, speeds, state)
+    # first 2 -> r0, next 3 -> r1, last unmatched
+    assert res.choice.tolist() == [0, 0, 1, 1, 1, -1]
+    assert res.granted.tolist() == [True] * 5 + [False]
+
+
+def test_state_tier_band_respected():
+    r0 = FakeReq(10)
+    state = MatchState.from_scheduler(
+        FakeSched([[(r0, 1.0, 2.0)]]), token=("t",))
+    aids = np.zeros(4, dtype=np.int64)
+    speeds = np.array([0.5, 1.0, 1.99, 2.0])
+    res = match_chunk(aids, speeds, state)
+    assert res.granted.tolist() == [False, True, True, False]
+
+
+def test_truncated_row_expands_exactly():
+    # 40 requests on one atom, all with demand 1 and the first 39 filled:
+    # with kcap=4 the row is truncated and the matcher must expand to find
+    # the 40th
+    reqs = [FakeReq(1, granted=1) for _ in range(39)] + [FakeReq(1)]
+    row = [(r, -math.inf, math.inf) for r in reqs]
+    sched = FakeSched([row])
+    engine = ArrayMatchEngine(kcap=4)
+    sched.prepare_match = lambda now: None
+    sched.match_token = lambda: ("t",)
+    sched.index = type("I", (), {"num_atoms": 1})()
+    engine.prepare(sched, 0.0)
+    res = engine.match(np.zeros(3, dtype=np.int64), np.ones(3))
+    assert res.choice.tolist() == [39, -1, -1]
+    assert res.granted.tolist() == [True, False, False]
+    assert engine.expansions >= 1
+
+
+def test_export_cap_exhaustion_widens_and_terminates():
+    """A row whose exported prefix is entirely dead must trigger
+    NeedWiderExport (not loop forever) and find the live slot after the
+    caller re-prepares with the widened cap."""
+    from repro.accel.engine import NeedWiderExport
+    reqs = [FakeReq(1, granted=1) for _ in range(150)] + [FakeReq(1)]
+    row = [(r, -math.inf, math.inf) for r in reqs]
+    sched = FakeSched([row])
+    sched.prepare_match = lambda now: None
+    sched.match_token = lambda: ("t",)
+    sched.index = type("I", (), {"num_atoms": 1})()
+    engine = ArrayMatchEngine()
+    aids = np.zeros(2, dtype=np.int64)
+    speeds = np.ones(2)
+    res = None
+    for _ in range(12):
+        engine.prepare(sched, 0.0)
+        try:
+            res = engine.match(aids, speeds)
+            break
+        except NeedWiderExport:
+            continue
+    assert res is not None, "match never terminated after widening"
+    assert res.choice.tolist() == [150, -1]
+    assert res.granted.tolist() == [True, False]
+
+
+def test_new_atom_after_state_build_takes_miss_path():
+    """classify() interns new atom ids without an index.version bump; a
+    cached miss-free state must not blind the drain to them (regression:
+    IndexError in engine.match on the fresh id)."""
+    from repro.core.types import Job
+    from repro.sim.devices import (DeviceChunk, REQ_COMPUTE, REQ_GENERAL)
+
+    class TwoComboStream:
+        fail_base = 0.0
+        fail_slow_boost = 0.0
+
+        def __init__(self):
+            self._i = 0
+
+        def next_chunk(self):
+            self._i += 1
+            n = 40
+            if self._i == 1:        # compute-rich devices: atom {g, cr}
+                t = np.linspace(10, 400, n)
+                cpu, mem = np.full(n, 10.0), np.full(n, 1.0)
+            elif self._i == 2:      # general-only devices: a NEW atom {g}
+                t = np.linspace(500, 900, n)
+                cpu, mem = np.full(n, 1.0), np.full(n, 10.0)
+            else:
+                return None
+            return DeviceChunk(times=t, cpu=cpu, mem=mem, speed=np.ones(n),
+                               resp_z=np.zeros(n), fail_u=np.full(n, 0.9))
+
+    def jobs():
+        return [Job(job_id=0, requirement=REQ_GENERAL, demand_per_round=500,
+                    total_rounds=1, arrival_time=0.0),
+                Job(job_id=1, requirement=REQ_COMPUTE, demand_per_round=500,
+                    total_rounds=1, arrival_time=0.0)]
+
+    cfg = SimConfig(max_time=1000.0)
+    m_py = Simulator(jobs(), SCHEDULERS["fifo"](seed=0), cfg=cfg,
+                     stream=TwoComboStream(), engine=None).run()
+    m_ar = Simulator(jobs(), SCHEDULERS["fifo"](seed=0), cfg=cfg,
+                     stream=TwoComboStream(), engine="array").run()
+    assert m_py.jcts == m_ar.jcts
+    assert m_py.rounds == m_ar.rounds
+
+
+def test_first_miss_flags_uncovered_atoms():
+    state = MatchState.from_scheduler(
+        FakeSched([[], None, []]), token=("t",))
+    assert state.first_miss(np.array([0, 2, 0])) == -1
+    assert state.first_miss(np.array([0, 1, 0])) == 1
+    assert state.first_miss(np.array([5])) == 0      # beyond the id space
+
+
+# ------------------------------------------------------------ supply SoA
+
+def test_supply_rings_match_scalar_rates():
+    rng = np.random.default_rng(0)
+    est = SupplyEstimator(window=3600.0, bucket=60.0)
+    atoms = [frozenset({c}) for c in "abcd"]
+    for t in np.sort(rng.uniform(0, 10_000, size=2000)):
+        est.record(atoms[int(rng.integers(0, 4))], float(t))
+    est.advance(10_500.0)
+    view = SupplyRings.from_estimator(est)
+    got = view.rates()
+    want = np.array([est.rate_id(a) for a in range(4)])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_snapshot_rates_matches_scalar_and_writes_back():
+    rng = np.random.default_rng(1)
+    est1 = SupplyEstimator(window=3600.0, bucket=60.0)
+    est2 = SupplyEstimator(window=3600.0, bucket=60.0)
+    atoms = [frozenset({c}) for c in "abc"]
+    times = np.sort(rng.uniform(0, 20_000, size=3000))
+    for t in times:
+        a = atoms[int(rng.integers(0, 3))]
+        est1.record(a, float(t))
+        est2.record(a, float(t))
+    est1.advance(21_000.0)
+    est2.advance(21_000.0)
+    seen, rates = est1.snapshot_rates()
+    for aid in range(3):
+        assert rates[aid] == est2.rate_id(aid)
+        assert seen[aid] == (est2._totals[aid] > 0)
+    # write-back left est1 consistent with the scalar path
+    for aid in range(3):
+        assert est1.rate_id(aid) == est2.rate_id(aid)
+
+
+# ------------------------------------------------- end-to-end equivalence
+
+def _run(jobs_cfg, pop, sim_cfg, sched_name, engine):
+    sim = Simulator(generate_jobs(jobs_cfg), SCHEDULERS[sched_name](seed=1),
+                    pop, sim_cfg, engine=engine, record_grants=True)
+    metrics = sim.run()
+    return metrics, sim
+
+
+def _check_engine_equivalence(seed: int, sched_name: str, rate: float) -> None:
+    jobs_cfg = JobTraceConfig(num_jobs=4, seed=seed, demand_lo=5,
+                              demand_hi=60, rounds_lo=2, rounds_hi=6)
+    pop = PopulationConfig(seed=seed + 7, base_rate=rate)
+    sim_cfg = SimConfig(max_time=1.0 * 24 * 3600.0)
+    m1, s1 = _run(jobs_cfg, pop, sim_cfg, sched_name, None)
+    m2, s2 = _run(jobs_cfg, pop, sim_cfg, sched_name, "array")
+    assert s1.grant_log == s2.grant_log       # identical grant sequences
+    assert m1.jcts == m2.jcts
+    assert m1.rounds == m2.rounds
+    assert m1.summary() == m2.summary()
+
+
+@pytest.mark.parametrize("seed,sched_name,rate", [
+    (0, "venn", 1.5), (1, "random", 0.7), (2, "srsf", 3.0),
+    (3, "venn", 4.0), (4, "fifo", 2.0), (5, "venn", 0.5),
+])
+def test_array_engine_equivalent_on_random_workloads(seed, sched_name, rate):
+    _check_engine_equivalence(seed, sched_name, rate)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 1_000),
+           st.sampled_from(["venn", "random", "srsf"]), st.floats(0.5, 4.0))
+    def test_array_engine_equivalent_on_random_workloads_hyp(
+            seed, sched_name, rate):
+        _check_engine_equivalence(seed, sched_name, rate)
+
+
+def test_array_engine_equivalent_with_tiering_and_contention():
+    """Longer run that exercises tier bands, fills, aborts and replans."""
+    jobs_cfg = JobTraceConfig(num_jobs=8, seed=5, demand_lo=20,
+                              demand_hi=150, rounds_lo=3, rounds_hi=10)
+    pop = PopulationConfig(seed=11, base_rate=3.0)
+    sim_cfg = SimConfig(max_time=4.0 * 24 * 3600.0)
+    m1, s1 = _run(jobs_cfg, pop, sim_cfg, "venn", None)
+    m2, s2 = _run(jobs_cfg, pop, sim_cfg, "venn", "array")
+    assert s1.grant_log == s2.grant_log
+    assert m1.jcts == m2.jcts
+    assert m1.rounds == m2.rounds
+    assert s2.engine.segments > 0             # the array path actually ran
+
+
+def test_unknown_engine_rejected():
+    with pytest.raises(ValueError, match="unknown engine"):
+        Simulator(generate_jobs(JobTraceConfig(num_jobs=1)),
+                  VennScheduler(), engine="warp")

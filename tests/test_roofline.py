@@ -4,8 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.launch.roofline import (GraphCost, parse_collectives,
-                                   roofline_terms)
+from repro.launch.roofline import (GraphCost, cost_analysis_dict,
+                                   parse_collectives, roofline_terms)
 
 
 def test_scan_composition_equals_unrolled():
@@ -31,10 +31,10 @@ def test_scan_composition_equals_unrolled():
     ws = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
     w1 = jax.ShapeDtypeStruct((D, D), jnp.float32)
 
-    scan_flops = jax.jit(scanned).lower(x, ws).compile().cost_analysis()["flops"]
-    unroll_flops = jax.jit(unrolled).lower(x, ws).compile().cost_analysis()["flops"]
-    block_flops = jax.jit(lambda x, w: jnp.sum(block(x, w))).lower(
-        x, w1).compile().cost_analysis()["flops"]
+    scan_flops = cost_analysis_dict(jax.jit(scanned).lower(x, ws).compile())["flops"]
+    unroll_flops = cost_analysis_dict(jax.jit(unrolled).lower(x, ws).compile())["flops"]
+    block_flops = cost_analysis_dict(jax.jit(lambda x, w: jnp.sum(block(x, w))).lower(
+        x, w1).compile())["flops"]
 
     composed = scan_flops + (L - 1) * block_flops
     # block program includes its own jnp.sum epilogue; allow 5% slack

@@ -62,6 +62,18 @@ def test_every_scenario_runs_under_fast_configs(name):
         assert len(r.metrics.jcts) == spec.jobs.num_jobs
 
 
+@pytest.mark.parametrize("name", scenario_names())
+def test_array_engine_matches_python_engine_registry_wide(name):
+    """The accel drain engine must be metric-identical on every registered
+    scenario (the acceptance bar for `--engine array`)."""
+    spec = _tiny(get_scenario(name))
+    py = run_one(spec, "venn", seed=0, engine="python")
+    ar = run_one(spec, "venn", seed=0, engine="array")
+    assert py.metrics.jcts == ar.metrics.jcts
+    assert py.metrics.rounds == ar.metrics.rounds
+    assert py.metrics.summary() == ar.metrics.summary()
+
+
 # ------------------------------------------------------- record -> replay
 
 @pytest.mark.parametrize("suffix", ["csv", "jsonl"])
@@ -340,6 +352,13 @@ def test_cli_list_and_fast_run(capsys):
                      "--seeds", "0"]) == 0
     out = capsys.readouterr().out
     assert "hot_atom" in out and "random" in out
+
+
+def test_cli_engine_flag_runs_array_engine(capsys):
+    assert cli_main(["run", "flash_crowd", "--fast", "--sched", "venn",
+                     "--seeds", "0", "--engine", "array"]) == 0
+    out = capsys.readouterr().out
+    assert "flash_crowd" in out and "venn" in out
 
 
 def test_cli_record_then_replay(tmp_path, capsys):

@@ -17,9 +17,14 @@ struct-of-arrays device streams) end to end:
   engine-independent chunk sampling/classification) — acceptance: metrics
   identical and the array loop >= 3x faster than the per-device loop.
 
+Also times the fault-injection sweep (``blackout_storm``/``flaky_ingest`` vs
+the fault-free baseline) so resilience features stay accountable on the hot
+path.
+
 Each scenario reports wall-clock (best of ``reps``), scheduler check-ins/sec,
-and Venn's avg JCT; results are written to ``BENCH_hotpath.json`` at the repo
-root so the perf trajectory is tracked across PRs.
+and Venn's avg JCT; results are merged into ``BENCH_hotpath.json`` at the
+repo root (merge, not overwrite: FAST runs skip the expensive rows and must
+not wipe them) so the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
@@ -164,6 +169,35 @@ def _scenario_replay_row():
         os.unlink(trace)
 
 
+def _fault_sweep_row():
+    """Fault-injection timing: the two faulted scenarios (blackout_storm,
+    flaky_ingest) under the array engine vs the fault-free baseline.
+
+    The ratio is a tracking number, not pure injector overhead (the faulted
+    scenarios also lose supply and re-provision rounds), but it bounds what
+    the fault layer costs the hot path and pins the resilience counters."""
+    base_spec = fast_scaled(get_scenario("baseline_even"))
+    base = run_one(base_spec, "venn", seed=0, engine="array")
+    row = {"baseline_even_wall_s": base.wall}
+    for name in ("blackout_storm", "flaky_ingest"):
+        spec = fast_scaled(get_scenario(name))
+        r = run_one(spec, "venn", seed=0, engine="array")
+        res = r.metrics.resilience()
+        row[name] = {
+            "wall_s": r.wall,
+            "wall_vs_baseline": round(r.wall / base.wall, 2),
+            "dropped_checkins": res["dropped_checkins"],
+            "revoked_responses": res["revoked_responses"],
+            "degraded_segments": res["degraded_segments"],
+            "flaky_retries": res["flaky_retries"],
+        }
+        emit(f"hotpath_faults_{name}", r.wall * 1e6,
+             f"wall={r.wall:.2f}s ({row[name]['wall_vs_baseline']}x base) "
+             f"dropped={res['dropped_checkins']} "
+             f"revoked={res['revoked_responses']}")
+    return row
+
+
 def main():
     results = {}
     for label, base_rate, num_jobs, days, reps in SCENARIOS:
@@ -199,10 +233,21 @@ def main():
         results["tenx_r500_j2000"] = _tenx_row(reps=3)
 
     results["scenario_replay_flash_crowd"] = _scenario_replay_row()
+    results["fault_sweep"] = _fault_sweep_row()
 
     out = Path(os.environ.get("REPRO_BENCH_OUT",
                               Path(__file__).resolve().parent.parent))
-    (out / "BENCH_hotpath.json").write_text(json.dumps(results, indent=2))
+    out_path = out / "BENCH_hotpath.json"
+    # merge into the existing report: FAST runs skip the expensive rows
+    # (tenx, heavy) and must not wipe them from the tracked file
+    merged = {}
+    if out_path.exists():
+        try:
+            merged = json.loads(out_path.read_text())
+        except ValueError:
+            merged = {}
+    merged.update(results)
+    out_path.write_text(json.dumps(merged, indent=2))
     return results
 
 

@@ -231,7 +231,7 @@ class ArrayMatchEngine:
     """
 
     def __init__(self, backend: str = "numpy", use_kernel: bool = False,
-                 kcap: int = 32):
+                 kcap: int = 32, replan_budget_s: Optional[float] = None):
         if backend not in ("numpy", "jax"):
             raise ValueError(f"unknown accel backend {backend!r}")
         self.backend = backend
@@ -241,8 +241,44 @@ class ArrayMatchEngine:
         self.rebuilds = 0
         self.segments = 0
         self.expansions = 0
+        # ---- graceful degradation (opt-in / counters) ----
+        # replan_budget_s: minimum simulated seconds between replans; a dirty
+        # plan inside the budget is served stale (sanitized for dead
+        # requests) instead of recompiled.  Trades exactness for bounded
+        # replan cost under churn — OFF by default, and incompatible with
+        # cross-engine bit-equality when it actually fires.
+        self.replan_budget_s = replan_budget_s
+        self.degraded_segments = 0      # vectorized calls served by the
+        #                                 sequential oracle (guard tripped)
+        self.stale_plans_served = 0     # replans skipped under the budget
+        self.staleness_s = 0.0          # cumulative age of stale plans served
+        self._last_replan_t = -np.inf
+
+    def __getstate__(self):
+        # MatchState caches id()-keyed request maps — meaningless across a
+        # pickle boundary.  Snapshot without it; the next prepare() rebuilds
+        # from restored scheduler state (exactness via the usual protocol).
+        d = dict(self.__dict__)
+        d["state"] = None
+        return d
 
     def prepare(self, sched, now: float) -> MatchState:
+        if (self.replan_budget_s is not None and self.state is not None
+                and getattr(sched, "_plan_dirty", False)
+                and now - self._last_replan_t < self.replan_budget_s):
+            # serve the stale plan: zero capacity of requests that are no
+            # longer live so no grant can reach them; new requests simply
+            # wait out the budget (recorded staleness, never corruption)
+            st = self.state
+            rem = st.remaining
+            for i, r in enumerate(st.requests):
+                if rem[i] > 0 and (r.complete_time is not None
+                                   or r.job.current is not r):
+                    rem[i] = 0
+            self.stale_plans_served += 1
+            self.staleness_s += now - self._last_replan_t
+            return st
+        was_dirty = bool(getattr(sched, "_plan_dirty", True))
         sched.prepare_match(now)
         token = sched.match_token()
         st = self.state
@@ -258,6 +294,8 @@ class ArrayMatchEngine:
             st.miss_free = st.all_covered \
                 and st.num_atoms == sched.index.num_atoms
             self.rebuilds += 1
+        if was_dirty or self._last_replan_t == -np.inf:
+            self._last_replan_t = now
         return st
 
     def invalidate(self) -> None:
@@ -284,11 +322,8 @@ class ArrayMatchEngine:
                 # tiny live subset: the per-row scan beats a dozen NumPy
                 # calls on 10-element arrays
                 res = match_chunk_seq(sub_ids, sub_speeds, st)
-            elif self.backend == "jax":
-                res = match_chunk_jax(sub_ids, sub_speeds, st,
-                                      use_kernel=self.use_kernel)
             else:
-                res = match_chunk(sub_ids, sub_speeds, st)
+                res = self._match_guarded(sub_ids, sub_speeds, st)
             # a truncated atom's row that exhausted its capped prefix might
             # have a deeper live slot: widen the cap and re-match (exact;
             # needs ~cap fills inside one segment, so it is rare)
@@ -306,3 +341,50 @@ class ArrayMatchEngine:
         choice[idx] = res.choice
         granted[idx] = res.granted
         return MatchResult(choice, granted)
+
+    # ------------------------------------------------- graceful degradation
+
+    def _match_guarded(self, sub_ids: np.ndarray, sub_speeds: np.ndarray,
+                       st: MatchState) -> MatchResult:
+        """Vectorized match with divergence guards: non-finite inputs,
+        backend exceptions, or an implausible result all degrade the segment
+        to the sequential oracle (bit-identical semantics) with a counter —
+        never an exception out of the drain loop."""
+        if not bool(np.isfinite(sub_speeds).all()):
+            # corrupted speed readings: the sequential scan's comparisons
+            # reject NaN/inf rows exactly like the scalar engine's checkin
+            # does, while backend kernels aren't audited for non-finite
+            # inputs — serve the whole segment scalar-side
+            self.degraded_segments += 1
+            return match_chunk_seq(sub_ids, sub_speeds, st)
+        try:
+            if self.backend == "jax":
+                res = match_chunk_jax(sub_ids, sub_speeds, st,
+                                      use_kernel=self.use_kernel)
+            else:
+                res = match_chunk(sub_ids, sub_speeds, st)
+        except Exception:
+            self.degraded_segments += 1
+            return match_chunk_seq(sub_ids, sub_speeds, st)
+        if not self._plausible(res, len(sub_ids), st):
+            self.degraded_segments += 1
+            return match_chunk_seq(sub_ids, sub_speeds, st)
+        return res
+
+    @staticmethod
+    def _plausible(res: MatchResult, m: int, st: MatchState) -> bool:
+        """Cheap invariants every correct match satisfies: shapes, choice
+        range, granted ⇒ chosen, per-request grants within capacity."""
+        ch, gr = res.choice, res.granted
+        if ch.shape != (m,) or gr.shape != (m,):
+            return False
+        R = len(st.remaining)
+        if m and (int(ch.min()) < -1 or int(ch.max()) >= R):
+            return False
+        if bool((gr & (ch < 0)).any()):
+            return False
+        if bool(gr.any()):
+            counts = np.bincount(ch[gr], minlength=R)
+            if bool((counts > st.remaining).any()):
+                return False
+        return True

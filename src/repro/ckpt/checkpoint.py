@@ -43,6 +43,29 @@ def _key_str(k) -> str:
     return str(k)
 
 
+def _step_of(name: str) -> Optional[int]:
+    """Step number of a ``step_<N>`` directory name, None for anything else
+    (foreign files, half-named junk — never an exception on listdir noise)."""
+    if not name.startswith("step_"):
+        return None
+    try:
+        return int(name.split("_", 1)[1])
+    except (IndexError, ValueError):
+        return None
+
+
+def _sweep_tmp(ckpt_dir: str, keep: Optional[str] = None) -> None:
+    """Remove ``.tmp-step_*`` leftovers from a killed writer (they are, by
+    construction, uncommitted — ``os.replace`` either ran or didn't)."""
+    for name in os.listdir(ckpt_dir):
+        if not name.startswith(".tmp-step_"):
+            continue
+        path = os.path.join(ckpt_dir, name)
+        if keep is not None and os.path.abspath(path) == os.path.abspath(keep):
+            continue
+        shutil.rmtree(path, ignore_errors=True)
+
+
 def save(ckpt_dir: str, step: int, tree: Any,
          extra: Optional[Dict[str, Any]] = None) -> str:
     os.makedirs(ckpt_dir, exist_ok=True)
@@ -50,6 +73,7 @@ def save(ckpt_dir: str, step: int, tree: Any,
     tmp = os.path.join(ckpt_dir, f".tmp-step_{step:08d}")
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
+    _sweep_tmp(ckpt_dir, keep=tmp)
     os.makedirs(tmp)
     named = _flatten_with_names(tree)
     arrays, dtypes = {}, {}
@@ -82,8 +106,8 @@ def save(ckpt_dir: str, step: int, tree: Any,
 def latest_step(ckpt_dir: str) -> Optional[int]:
     if not os.path.isdir(ckpt_dir):
         return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
-             if d.startswith("step_")]
+    steps = [s for s in (_step_of(d) for d in os.listdir(ckpt_dir))
+             if s is not None]
     return max(steps) if steps else None
 
 
@@ -100,8 +124,16 @@ def restore(ckpt_dir: str, tree_like: Any, step: Optional[int] = None,
         manifest = json.load(f)
     data = np.load(os.path.join(path, "arrays.npz"))
     named = _flatten_with_names(tree_like)
-    assert [n for n, _ in named] == manifest["names"], \
-        "checkpoint tree structure mismatch"
+    have = [n for n, _ in named]
+    want = manifest["names"]
+    if have != want:
+        missing = [n for n in want if n not in have]
+        unexpected = [n for n in have if n not in want]
+        raise ValueError(
+            f"checkpoint tree structure mismatch at step {step} in "
+            f"{ckpt_dir!r}: checkpoint has {len(want)} leaves, tree_like has "
+            f"{len(have)}; missing from tree_like: {missing[:5]!r}; "
+            f"unexpected in tree_like: {unexpected[:5]!r}")
     leaves = []
     sh_leaves = (jax.tree.leaves(shardings) if shardings is not None
                  else [None] * len(named))
@@ -111,7 +143,10 @@ def restore(ckpt_dir: str, tree_like: Any, step: Optional[int] = None,
         if dtypes.get(name) == "bfloat16":
             import ml_dtypes
             arr = arr.view(ml_dtypes.bfloat16)
-        assert tuple(arr.shape) == tuple(like.shape), (name, arr.shape, like.shape)
+        if tuple(arr.shape) != tuple(like.shape):
+            raise ValueError(
+                f"checkpoint leaf {name!r} at step {step}: stored shape "
+                f"{tuple(arr.shape)} != target shape {tuple(like.shape)}")
         if sh is not None:
             leaves.append(jax.device_put(arr, sh))
         else:
@@ -121,8 +156,8 @@ def restore(ckpt_dir: str, tree_like: Any, step: Optional[int] = None,
 
 
 def prune(ckpt_dir: str, keep: int = 3) -> None:
-    steps = sorted(int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
-                   if d.startswith("step_"))
+    steps = sorted(s for s in (_step_of(d) for d in os.listdir(ckpt_dir))
+                   if s is not None)
     for s in steps[:-keep]:
         shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"))
 

@@ -72,6 +72,24 @@ class VennScheduler(BaseScheduler):
         self._feed_ids: Optional[np.ndarray] = None
         self._feed_pos = 0
 
+    # ------------------------------------------------------- crash snapshots
+
+    def __getstate__(self):
+        """``tier_decisions`` is keyed by ``id(request)`` — meaningless in a
+        new process.  Pickle it as (request, decision) pairs; the requests
+        are the same objects as in ``self.pending``, so the pickle memo keeps
+        identity and ``__setstate__`` can re-key by the *restored* ids."""
+        d = dict(self.__dict__)
+        d["tier_decisions"] = [(req, dec) for req, dec in
+                               ((r, self.tier_decisions.get(id(r)))
+                                for r in self.pending) if dec is not None]
+        return d
+
+    def __setstate__(self, d):
+        pairs = d.pop("tier_decisions", [])
+        self.__dict__.update(d)
+        self.tier_decisions = {id(req): dec for req, dec in pairs}
+
     # ------------------------------------------------------------ sim hooks
 
     def on_request(self, request: JobRequest, now: float) -> None:

@@ -1,0 +1,23 @@
+"""Fault injection + crash-consistent recovery for the Venn simulator.
+
+See ``README.md`` in this package for the fault taxonomy, recovery
+semantics, and the drift bound (zero — restore is bit-exact).
+"""
+from .plan import (Blackout, ChunkChaos, ClockSkew, FaultPlan, FlakyIngest)
+from .injector import FaultInjector, inject
+from .recovery import (latest_snapshot_step, restore_simulator,
+                       run_with_crashes, snapshot_simulator)
+
+__all__ = [
+    "Blackout",
+    "ChunkChaos",
+    "ClockSkew",
+    "FaultPlan",
+    "FlakyIngest",
+    "FaultInjector",
+    "inject",
+    "snapshot_simulator",
+    "restore_simulator",
+    "latest_snapshot_step",
+    "run_with_crashes",
+]

@@ -31,7 +31,7 @@ class OvercommitPolicy:
         """Provision so that expected responders >= quorum of nominal demand:
         factor * (1 - fail_rate) >= quorum  =>  factor = quorum/(1-fail)."""
         safe = max(1e-3, 1.0 - self._fail_rate)
-        f = max(self.base * 0.0 + quorum_fraction / safe, self.min_factor)
+        f = max(quorum_fraction / safe, self.min_factor)
         return min(f, self.max_factor)
 
     def demand(self, nominal: int, quorum_fraction: float = 0.8) -> int:

@@ -10,6 +10,8 @@ straggler tails.
 """
 from __future__ import annotations
 
+from ..faults.plan import (Blackout, ChunkChaos, ClockSkew, FaultPlan,
+                           FlakyIngest)
 from ..sim.devices import PopulationConfig
 from ..sim.simulator import SimConfig
 from ..sim.traces import JobTraceConfig
@@ -109,6 +111,40 @@ register(ScenarioSpec(
     population=PopulationConfig(base_rate=2.0),
     sim=_SIM,
     pin_requirement="high_performance",
+))
+
+register(ScenarioSpec(
+    name="blackout_storm",
+    description="Correlated blackouts beyond iid churn: two outage windows "
+                "mass-drop check-ins AND revoke in-flight responses (devices "
+                "go dark mid-task); adaptive overcommit (§3) re-provisions "
+                "retried rounds from the observed failure rate.",
+    jobs=_JOBS,
+    population=PopulationConfig(base_rate=2.0),
+    sim=SimConfig(max_time=WEEK, adaptive_overcommit=True),
+    # windows sit early in the horizon (jobs drain the queue well before the
+    # hard stop — the horizon is a safety bound, not the busy period)
+    fault_plan=FaultPlan(
+        blackouts=(Blackout(start=0.010, stop=0.022, drop_prob=0.9),
+                   Blackout(start=0.035, stop=0.045, drop_prob=1.0)),
+        seed=7),
+))
+
+register(ScenarioSpec(
+    name="flaky_ingest",
+    description="A lossy, reordering ingest path: flaky chunk reads with "
+                "retry+backoff, chunk drop/dup/reorder, clock-skewed late "
+                "check-ins, and NaN-corrupted speed readings the matcher "
+                "must degrade around, not crash on.",
+    jobs=_JOBS,
+    population=PopulationConfig(base_rate=2.0),
+    sim=_SIM,
+    fault_plan=FaultPlan(
+        chunk_chaos=ChunkChaos(drop_prob=0.02, dup_prob=0.15,
+                               reorder_prob=0.15, corrupt_speed_prob=0.01),
+        clock_skew=ClockSkew(fraction=0.05, max_skew=1800.0),
+        flaky_ingest=FlakyIngest(fail_prob=0.25, max_retries=6, backoff=2.0),
+        seed=11),
 ))
 
 register(ScenarioSpec(

@@ -16,6 +16,7 @@ import numpy as np
 
 from ..core import SCHEDULERS
 from ..core.types import Job
+from ..faults.injector import FaultInjector
 from ..sim.metrics import SimMetrics
 from ..sim.simulator import Simulator
 from .spec import ScenarioSpec, get_scenario
@@ -67,16 +68,26 @@ def run_one(spec: ScenarioSpec, sched_name: str, seed: int,
     drain engine (``"python"`` scalar loop or ``"array"`` batched matching —
     identical metrics, different wall-clock)."""
     jobs = build_jobs(spec, seed)
+    plan = spec.fault_plan.resolve(spec.sim.max_time) \
+        if spec.fault_plan is not None else None
     if replay is not None:
         # seed drives synthesized randomness for traces that omit the
         # resp_z/fail_u columns; recorded traces carry them and ignore it
         stream = TraceReplayStream(replay, seed=seed)
+        # no injector on replay: a trace recorded under this scenario
+        # already embeds the stream-side faults (recording sits outside the
+        # injector), so re-wrapping would apply them twice.  The simulator
+        # still takes the plan for blackout response revocation, which is
+        # not a stream artifact — record→replay stays bit-identical.
     else:
         stream = build_stream(spec, seed)
+        if plan is not None and not plan.is_empty:
+            stream = FaultInjector(stream, plan)
     if record is not None:
         stream = RecordingStream(stream, record)
     sched = SCHEDULERS[sched_name](seed=seed)
-    sim = Simulator(jobs, sched, cfg=spec.sim, stream=stream, engine=engine)
+    sim = Simulator(jobs, sched, cfg=spec.sim, stream=stream, engine=engine,
+                    faults=plan)
     t0 = time.time()
     try:
         metrics = sim.run()
@@ -162,6 +173,18 @@ def comparison_table(results: List[RunResult]) -> str:
             jct = float(np.mean([r.metrics.avg_jct for r in by_sched[name]]))
             if jct > 0:
                 lines.append(f"speedup {name} vs {ref}: {ref_jct / jct:.2f}x")
+    # resilience breakdown when any fault/recovery counter fired
+    res_keys = [k for k in (results[0].metrics.resilience() if results else {})
+                if k != "submitted_rounds"]
+    if any(r.metrics.resilience()[k] for r in results for k in res_keys):
+        lines.append("")
+        lines.append(f"{'scheduler':<10} " + " ".join(
+            f"{k:>18}" for k in res_keys))
+        for name, runs in by_sched.items():
+            vals = [float(np.mean([r.metrics.resilience()[k] for r in runs]))
+                    for k in res_keys]
+            lines.append(f"{name:<10} " + " ".join(
+                f"{v:>18.1f}" for v in vals))
     # per-tenant breakdown when the scenario tags tenants
     tenants = {t for r in results for t in _tenant_jcts(r)}
     if tenants != {"default"}:

@@ -18,6 +18,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+from ..faults.plan import FaultPlan
 from ..sim.devices import PopulationConfig
 from ..sim.simulator import SimConfig
 from ..sim.traces import JobTraceConfig
@@ -101,6 +102,11 @@ class ScenarioSpec:
     # ---- job-side hooks ----
     pin_requirement: Optional[str] = None        # all jobs -> one req class
     tenant_tiers: Tuple[TenantTier, ...] = ()
+    # ---- fault injection (repro.faults) ----
+    # fractional plans share the horizon-fraction window convention above;
+    # the runner resolves them against sim.max_time and composes the
+    # injector onto the device stream + arms simulator-side revocation
+    fault_plan: Optional[FaultPlan] = None
 
     def validate(self) -> None:
         for w in (*self.rate_spikes, *self.failure_storms):
@@ -118,6 +124,8 @@ class ScenarioSpec:
             if not 0.999 <= tot <= 1.001:
                 raise ValueError(
                     f"{self.name}: tenant tier fractions sum to {tot}, not 1")
+        if self.fault_plan is not None:
+            self.fault_plan.validate()
 
 
 # --------------------------------------------------------------------------- #

@@ -124,6 +124,12 @@ class RecordingStream:
     def __exit__(self, *exc) -> None:
         self.close()
 
+    def __getstate__(self):
+        raise TypeError(
+            "RecordingStream holds an open trace file mid-write and cannot "
+            "be snapshotted; record the trace in a plain run, then snapshot "
+            "replay runs (TraceReplayStream pickles fine)")
+
 
 def record_stream(inner: ChunkStream, path: str) -> RecordingStream:
     """Convenience alias: wrap ``inner`` so its chunks are dumped to ``path``."""
@@ -155,6 +161,8 @@ class TraceReplayStream:
         self._fh: Optional[IO[str]] = open(path, "r")
         self._last_t = -math.inf
         self.rows_read = 0
+        self.skipped_rows = 0           # malformed/truncated rows tolerated
+        self._row_width: Optional[int] = None   # set by the first valid row
         header = self._read_header()
         self.fail_base = fail_base if fail_base is not None else \
             header.get("fail_base", PopulationConfig.fail_base)
@@ -221,23 +229,66 @@ class TraceReplayStream:
 
     # ------------------------------------------------------------------- chunks
 
-    def _parse_rows(self) -> List[List[float]]:
-        assert self._fh is not None
-        rows: List[List[float]] = []
-        if self._pending_row is not None:
-            rows.append([float(x) for x in self._pending_row])
-            self._pending_row = None
-        for line in self._fh:
-            line = line.strip()
-            if not line or line.startswith("#"):
-                continue
+    def _parse_row(self, line: str) -> Optional[List[float]]:
+        """One trace line -> row of floats, or None for a malformed /
+        truncated / non-finite-time row (skipped + counted, never raised:
+        a corrupt line in a gigabyte trace must not kill the replay)."""
+        try:
             if self._jsonl:
                 obj = json.loads(line)
                 if self._row_keys is not None:
                     obj = [obj[k] for k in self._row_keys]
-                rows.append([float(x) for x in obj])
+                row = [float(x) for x in obj]
             else:
-                rows.append([float(x) for x in line.split(",")])
+                row = [float(x) for x in line.split(",")]
+        except (ValueError, TypeError, KeyError, json.JSONDecodeError):
+            self.skipped_rows += 1
+            return None
+        if self._row_width is None:
+            self._row_width = len(row)
+        elif len(row) != self._row_width:
+            self.skipped_rows += 1      # truncated (or padded) row
+            return None
+        t_ix = self._time_ix
+        if t_ix is not None and t_ix < len(row) \
+                and not math.isfinite(row[t_ix]):
+            self.skipped_rows += 1      # NaN/inf timestamp: unusable row
+            return None
+        return row
+
+    @property
+    def _time_ix(self) -> Optional[int]:
+        try:
+            return self._cols.index("time")
+        except ValueError:
+            return None
+
+    def _parse_rows(self) -> List[List[float]]:
+        assert self._fh is not None
+        rows: List[List[float]] = []
+        if self._pending_row is not None:
+            pending, self._pending_row = self._pending_row, None
+            try:
+                row = [float(x) for x in pending]
+            except (ValueError, TypeError):
+                self.skipped_rows += 1
+            else:
+                self._row_width = len(row)
+                rows.append(row)
+        # readline loop (not `for line in fh`): file iteration disables
+        # tell(), which the pickle path needs to snapshot the read offset
+        readline = self._fh.readline
+        while True:
+            line = readline()
+            if not line:
+                break
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            row = self._parse_row(line)
+            if row is None:
+                continue
+            rows.append(row)
             if len(rows) >= self.chunk_rows:
                 break
         return rows
@@ -283,6 +334,26 @@ class TraceReplayStream:
         if self._fh is not None:
             self._fh.close()
             self._fh = None
+
+    # ------------------------------------------------------ crash snapshots
+
+    def __getstate__(self):
+        """Pickle as (state, read offset); the file handle is reopened and
+        re-seeked on restore, so a snapshotted replay resumes on the exact
+        next unread byte."""
+        d = dict(self.__dict__)
+        fh = d.pop("_fh")
+        d["_fh_offset"] = fh.tell() if fh is not None else None
+        return d
+
+    def __setstate__(self, d):
+        offset = d.pop("_fh_offset", None)
+        self.__dict__.update(d)
+        if offset is None:
+            self._fh = None
+        else:
+            self._fh = open(self.path, "r")
+            self._fh.seek(offset)
 
     def __enter__(self) -> "TraceReplayStream":
         return self

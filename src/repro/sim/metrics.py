@@ -43,6 +43,17 @@ class SimMetrics:
     unfinished: int = 0
     makespan: float = 0.0
     _jobs: List[Job] = field(default_factory=list)
+    # ---- resilience counters (fault injection / recovery / degradation).
+    # Kept OUT of summary(): summary() is compared bit-for-bit across drain
+    # engines, and e.g. degraded_segments only exists on the array engine.
+    submitted_rounds: int = 0      # every _submit_round (incl. retries)
+    revoked_responses: int = 0     # in-flight responses killed by blackouts
+    recovery_events: int = 0       # crash-restore cycles this metrics lived
+    degraded_segments: int = 0     # accel segments served by scalar fallback
+    stale_plans_served: int = 0    # replans skipped under the time budget
+    skipped_rows: int = 0          # malformed trace rows skipped on replay
+    dropped_checkins: int = 0      # check-in rows removed by stream faults
+    flaky_retries: int = 0         # ingest read retries (flaky-read model)
 
     def finalize(self, jobs: List[Job], now: float) -> None:
         self._jobs = list(jobs)
@@ -86,6 +97,21 @@ class SimMetrics:
         m = num_jobs if num_jobs is not None else len(self.jcts)
         met = [self.jcts[i] <= m * sd for i, sd in solo_jcts.items() if i in self.jcts]
         return float(np.mean(met)) if met else float("nan")
+
+    def resilience(self) -> Dict[str, int]:
+        """Fault/recovery counters.  Every entry except ``submitted_rounds``
+        (a plain throughput denominator) is exactly zero on a fault-free,
+        crash-free run."""
+        return {
+            "submitted_rounds": self.submitted_rounds,
+            "revoked_responses": self.revoked_responses,
+            "recovery_events": self.recovery_events,
+            "degraded_segments": self.degraded_segments,
+            "stale_plans_served": self.stale_plans_served,
+            "skipped_rows": self.skipped_rows,
+            "dropped_checkins": self.dropped_checkins,
+            "flaky_retries": self.flaky_retries,
+        }
 
     def summary(self) -> Dict[str, float]:
         return {

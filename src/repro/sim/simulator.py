@@ -62,7 +62,7 @@ from .devices import (ChunkStream, DeviceChunk, DeviceGenerator,
                       response_time_from)
 from .metrics import RoundRecord, SimMetrics
 
-JOB_ARRIVAL, RESPONSE, DEADLINE = 0, 1, 2
+JOB_ARRIVAL, RESPONSE, DEADLINE, FAULT = 0, 1, 2, 3
 
 
 @dataclass
@@ -70,6 +70,11 @@ class SimConfig:
     max_time: float = 14 * 24 * 3600.0      # hard stop (simulated seconds)
     max_round_retries: int = 12             # give up on a round after this many aborts
     seed: int = 0
+    # §3 mitigation: size request demand adaptively per job from the observed
+    # failure rate (OvercommitPolicy), seeded by Job.overcommit.  Off by
+    # default — the static path honors Job.overcommit directly and is
+    # bit-identical to the pre-policy simulator when overcommit == 1.0.
+    adaptive_overcommit: bool = False
 
 
 class Simulator:
@@ -78,7 +83,8 @@ class Simulator:
                  cfg: Optional[SimConfig] = None,
                  stream: Optional[ChunkStream] = None,
                  engine: Optional[str] = None,
-                 record_grants: bool = False):
+                 record_grants: bool = False,
+                 faults: Optional[object] = None):
         self.jobs = jobs
         self.sched = scheduler
         self.cfg = cfg or SimConfig()
@@ -96,9 +102,25 @@ class Simulator:
         elif engine == "array":
             from ..accel.engine import ArrayMatchEngine
             self.engine = ArrayMatchEngine()
+        elif hasattr(engine, "prepare") and hasattr(engine, "match"):
+            self.engine = engine            # a pre-configured engine instance
         else:
             raise ValueError(f"unknown engine {engine!r} "
-                             "(expected 'python' or 'array')")
+                             "(expected 'python', 'array', or an engine "
+                             "instance)")
+        # fault plan (duck-typed — repro.faults.FaultPlan; the simulator only
+        # consumes blackout windows for response revocation, the stream-side
+        # faults live in the FaultInjector wrapper)
+        if faults is not None:
+            faults = faults.resolve(self.cfg.max_time)
+            self._fault_rng = np.random.default_rng(
+                faults.seed + 0x5EED)
+        else:
+            self._fault_rng = None
+        self.faults = faults
+        self._oc_policies: dict = {}    # job_id -> OvercommitPolicy
+        self._started = False
+        self._finished = False
         # optional (time, job_id, round_index) log of every grant, for
         # engine-equivalence tests and debugging
         self.grant_log: Optional[list] = [] if record_grants else None
@@ -116,8 +138,22 @@ class Simulator:
     # ------------------------------------------------------------------ api
 
     def run(self) -> SimMetrics:
+        self.start()
+        return self.finish()
+
+    def start(self) -> None:
+        """Arm the event loop (idempotent).  Split from :meth:`run` so the
+        simulation can be paused at arbitrary times (``step_until``),
+        snapshotted, and resumed — the crash-recovery substrate."""
+        if self._started:
+            return
+        self._started = True
         for job in self.jobs:
             self._push(job.arrival_time, JOB_ARRIVAL, job)
+        if self.faults is not None:
+            for b in self.faults.blackouts:
+                if b.revoke_in_flight and b.start <= self.cfg.max_time:
+                    self._push(b.start, FAULT, b)
         self._done = 0
         self._open = 0                  # outstanding requests with remaining demand
         self._chunk: Optional[DeviceChunk] = None
@@ -125,9 +161,19 @@ class Simulator:
         self._cursor = 0                # Python-float indexing is ~3x cheaper
         self._chunk_version = -1        # than NumPy scalar indexing here
         self._load_next_chunk()
+
+    def step_until(self, until: Optional[float] = None) -> bool:
+        """Advance the simulation to ``min(until, cfg.max_time)``.
+
+        Returns True when the simulation is *finished* (all jobs done, the
+        event sources are exhausted, or the horizon was crossed); False means
+        it paused at the bound and can be resumed (or snapshotted) there.
+        """
+        self.start()
         heap = self._heap
         heappop = heapq.heappop
         max_time = self.cfg.max_time
+        bound = max_time if until is None else min(until, max_time)
         n_jobs = len(self.jobs)
         drain = self._drain_array if self.engine is not None \
             else self._drain_python
@@ -135,16 +181,20 @@ class Simulator:
         while self._done < n_jobs:
             # ---- drain device check-ins until the heap takes priority ----
             t0 = perf()
-            stopped = drain(max_time)
+            stopped = drain(bound)
             self.drain_seconds += perf() - t0
             if stopped:
-                break                   # a check-in crossed max_time
-            # ---- one control event ----
+                # a check-in crossed the bound; only a horizon crossing ends
+                # the simulation — a pause bound leaves it resumable
+                return bound >= max_time
+            # ---- one control event (peek first: an event past the bound
+            # stays queued so a paused simulation loses nothing) ----
             if not heap:
-                break
-            t, _, kind, payload = heappop(heap)
-            if t > max_time:
-                break
+                return True
+            t = heap[0][0]
+            if t > bound:
+                return t > max_time
+            _, _, kind, payload = heappop(heap)
             self.now = t
             if kind == JOB_ARRIVAL:
                 self._on_job_arrival(payload)           # type: ignore[arg-type]
@@ -152,14 +202,27 @@ class Simulator:
                 self._pop_response(payload)             # type: ignore[arg-type]
             elif kind == DEADLINE:
                 self._on_deadline(payload)              # type: ignore[arg-type]
-        self.metrics.finalize(self.jobs, self.now)
+            elif kind == FAULT:
+                self._on_blackout(payload)              # type: ignore[arg-type]
+        return True
+
+    def finish(self) -> SimMetrics:
+        """Run to completion and finalize metrics (idempotent)."""
+        self.start()
+        if not self._finished:
+            self.step_until(None)
+            self._collect_resilience()
+            self.metrics.finalize(self.jobs, self.now)
+            self._finished = True
         return self.metrics
 
     # --------------------------------------------------- drain: scalar path
 
-    def _drain_python(self, max_time: float) -> bool:
+    def _drain_python(self, bound: float) -> bool:
         """Per-check-in drain until the next control event takes priority.
-        Returns True when a check-in crossed ``max_time`` (simulation stop).
+        Returns True when a check-in crossed ``bound`` (horizon or pause
+        point); the cursor stays on the crossing row so a paused drain
+        resumes exactly where it stopped.
 
         The check-in scan is inlined (it runs millions of times per simulated
         month); grant side effects go through the shared ``_grant``."""
@@ -197,7 +260,7 @@ class Simulator:
                 dev_t = times[cursor]
                 if heap_t < dev_t:
                     break
-                if dev_t > max_time:
+                if dev_t > bound:
                     stop = True
                     break
                 if not self._open:
@@ -207,7 +270,7 @@ class Simulator:
                     self._cursor = cursor
                     self.checkins_seen += cursor - seg_start - seg_dead
                     self.checkins_skipped += seg_dead
-                    self._skip_idle(min(heap_t, max_time))
+                    self._skip_idle(min(heap_t, bound))
                     times, cpu, mem = self._times, self._cpu, self._mem
                     spd, aids = self._speed, self._aids
                     n_times = len(times)
@@ -257,7 +320,7 @@ class Simulator:
 
     # ---------------------------------------------------- drain: array path
 
-    def _drain_array(self, max_time: float) -> bool:
+    def _drain_array(self, bound: float) -> bool:
         """Batched drain (``engine="array"``): match whole segments of
         check-ins in one :mod:`repro.accel` call, then apply grants in time
         order, truncating exactly where a newly armed control event (or a
@@ -287,14 +350,14 @@ class Simulator:
             dev_t = times[cursor]
             if heap_t < dev_t:
                 return False                    # control event first
-            if dev_t > max_time:
-                return True                     # simulation stop
+            if dev_t > bound:
+                return True                     # crossed the bound: stop
             if not self._open:
-                self._skip_idle(min(heap_t, max_time))
+                self._skip_idle(min(heap_t, bound))
                 continue
             ck = self._chunk
-            bound = heap_t if heap_t < max_time else max_time
-            hi = int(np.searchsorted(ck.times, bound, side="right"))
+            seg_bound = heap_t if heap_t < bound else bound
+            hi = int(np.searchsorted(ck.times, seg_bound, side="right"))
             if hi > cursor + SEG_ROWS:          # bound the dense working set
                 hi = cursor + SEG_ROWS
             # scheduler's lazy replan runs at the first check-in's time,
@@ -532,19 +595,99 @@ class Simulator:
         if self._cursor >= ck.n:
             self._load_next_chunk()
 
+    # ---- faults & recovery ----
+
+    def _on_blackout(self, b) -> None:
+        """A correlated blackout begins: devices whose response would land
+        inside ``[b.start, b.stop)`` went dark mid-task — revoke those
+        in-flight rows (each with ``b.drop_prob``) so they never report back.
+        Deterministic across drain engines: job order, buffer layout, and RNG
+        draw order are all grant-order artifacts, which are bit-identical."""
+        rng = self._fault_rng
+        for job in self.jobs:
+            req = job.current
+            if req is None:
+                continue
+            buf = req.resp_buf
+            if not buf:
+                continue
+            keep = []
+            revoked = 0
+            for e in buf:
+                if b.start <= e[0] < b.stop and (
+                        b.drop_prob >= 1.0 or rng.random() < b.drop_prob):
+                    revoked += 1
+                else:
+                    keep.append(e)
+            if not revoked:
+                continue
+            self.metrics.revoked_responses += revoked
+            heapq.heapify(keep)
+            req.resp_buf = keep or None
+            head = keep[0][0] if keep else math.inf
+            if head != req.resp_t:
+                # re-arm (the control-heap entry at the old resp_t goes
+                # stale via the usual armed-entry protocol)
+                req.resp_t = head
+                if keep:
+                    self._push(head, RESPONSE, req)
+
+    def _collect_resilience(self) -> None:
+        """Fold engine- and stream-side fault counters into the metrics."""
+        m = self.metrics
+        eng = self.engine
+        if eng is not None:
+            m.degraded_segments += int(getattr(eng, "degraded_segments", 0))
+            m.stale_plans_served += int(getattr(eng, "stale_plans_served", 0))
+        s = self.stream
+        while s is not None:
+            m.skipped_rows += int(getattr(s, "skipped_rows", 0))
+            fc = getattr(s, "fault_counters", None)
+            if fc is not None:
+                c = fc()
+                m.dropped_checkins += int(c["rows_dropped_blackout"]
+                                          + c["rows_dropped_chunks"])
+                m.flaky_retries += int(c["flaky_retries"])
+            s = getattr(s, "inner", None)
+
+    def _after_restore(self) -> None:
+        """Post-unpickle hook (see :mod:`repro.faults.recovery`): drop the
+        accel engine's derived dispatch tables — they are rebuilt by the next
+        ``prepare`` from restored scheduler state — and count the recovery."""
+        if self.engine is not None:
+            self.engine.invalidate()
+        self.metrics.recovery_events += 1
+
     # ---- job lifecycle ----
 
     def _on_job_arrival(self, job: Job) -> None:
         self._submit_round(job, round_index=job.rounds_done)
 
     def _submit_round(self, job: Job, round_index: int, aborted: int = 0) -> None:
+        nominal = job.demand_per_round
+        demand = nominal
+        if self.cfg.adaptive_overcommit:
+            pol = self._oc_policies.get(job.job_id)
+            if pol is None:
+                from ..fed.overcommit import OvercommitPolicy
+                pol = OvercommitPolicy(base=max(1.0, job.overcommit))
+                self._oc_policies[job.job_id] = pol
+            demand = pol.demand(nominal, job.quorum_fraction)
+        elif job.overcommit > 1.0:
+            # static §3 over-provisioning: the job asks for more grants than
+            # it needs so stragglers/failures don't abort the round
+            demand = max(nominal, int(round(nominal * job.overcommit)))
         req = JobRequest(job=job, round_index=round_index,
-                         demand=job.demand_per_round, submit_time=self.now,
+                         demand=demand, submit_time=self.now,
                          aborted=aborted)
-        req.quorum = math.ceil(job.quorum_fraction * req.demand)
+        # quorum counts against *nominal* demand (§3: overcommit buys slack,
+        # it doesn't raise the bar) — identical to the pre-policy simulator
+        # whenever overcommit == 1.0
+        req.quorum = math.ceil(job.quorum_fraction * nominal)
         job.current = req
         job.status = JobStatus.WAITING
         self._open += 1
+        self.metrics.submitted_rounds += 1
         self.sched.on_request(req, self.now)
 
     def _pop_response(self, req: JobRequest) -> None:
@@ -589,6 +732,7 @@ class Simulator:
         # (the request is necessarily filled here — DEADLINE events are only
         # pushed at fill time — so _open was already decremented)
         self.metrics.aborts += 1
+        self._observe_overcommit(job, req)
         self.sched.on_complete(req, self.now)
         job.current = None
         if req.aborted + 1 >= self.cfg.max_round_retries:
@@ -618,12 +762,21 @@ class Simulator:
             failures=req.failures,
             retries=req.aborted,
         ))
+        self._observe_overcommit(job, req)
         self.sched.on_complete(req, self.now)
         job.current = None
         if job.rounds_done >= job.total_rounds:
             self._finish_job(job)
         else:
             self._submit_round(job, job.rounds_done)
+
+    def _observe_overcommit(self, job: Job, req: JobRequest) -> None:
+        """Feed the round's grant/response outcome to the job's adaptive
+        overcommit policy (no-op unless ``cfg.adaptive_overcommit``)."""
+        if self.cfg.adaptive_overcommit:
+            pol = self._oc_policies.get(job.job_id)
+            if pol is not None:
+                pol.observe_round(req.granted, req.responses)
 
     def _finish_job(self, job: Job) -> None:
         job.status = JobStatus.DONE
@@ -635,6 +788,7 @@ def run_workload(jobs: List[Job], scheduler: BaseScheduler,
                  population: Optional[PopulationConfig] = None,
                  sim: Optional[SimConfig] = None,
                  stream: Optional[ChunkStream] = None,
-                 engine: Optional[str] = None) -> SimMetrics:
+                 engine: Optional[str] = None,
+                 faults: Optional[object] = None) -> SimMetrics:
     return Simulator(jobs, scheduler, population, sim, stream=stream,
-                     engine=engine).run()
+                     engine=engine, faults=faults).run()

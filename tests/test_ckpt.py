@@ -30,8 +30,47 @@ def test_save_restore_roundtrip(tmp_path):
 def test_restore_structure_mismatch_raises(tmp_path):
     save(str(tmp_path), 1, _tree())
     bad = {"w": jnp.zeros((16, 8)), "other": jnp.zeros(3)}
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="structure mismatch"):
         restore(str(tmp_path), bad)
+
+
+def test_restore_shape_mismatch_names_leaf(tmp_path):
+    save(str(tmp_path), 1, _tree())
+    bad = _tree()
+    bad["w"] = jnp.zeros((4, 8), jnp.float32)
+    with pytest.raises(ValueError, match="'w'"):
+        restore(str(tmp_path), bad)
+
+
+def test_crash_mid_write_recovery(tmp_path):
+    """A writer killed mid-write leaves a .tmp-step_* dir: readers ignore
+    it, the next save sweeps it, and restore serves the last committed
+    step."""
+    t = _tree()
+    save(str(tmp_path), 1, t)
+    # a killed writer's half-finished step-2 attempt
+    junk = tmp_path / ".tmp-step_00000002"
+    os.makedirs(junk)
+    (junk / "arrays.npz").write_bytes(b"partial garbage")
+    assert latest_step(str(tmp_path)) == 1          # never visible
+    out, manifest = restore(str(tmp_path), t)
+    assert manifest["step"] == 1
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    save(str(tmp_path), 3, _tree(3))                # sweeps the leftovers
+    assert not junk.exists()
+    assert latest_step(str(tmp_path)) == 3
+
+
+def test_listdir_noise_tolerated(tmp_path):
+    """Foreign files/dirs that merely resemble checkpoints don't crash
+    step parsing."""
+    save(str(tmp_path), 4, _tree())
+    (tmp_path / "step_notanumber").mkdir()
+    (tmp_path / "stepfile.txt").write_text("x")
+    assert latest_step(str(tmp_path)) == 4
+    prune(str(tmp_path), keep=1)
+    assert latest_step(str(tmp_path)) == 4
 
 
 def test_latest_and_prune(tmp_path):

@@ -19,12 +19,19 @@ struct-of-arrays device streams) end to end:
 
 Also times the fault-injection sweep (``blackout_storm``/``flaky_ingest`` vs
 the fault-free baseline) so resilience features stay accountable on the hot
-path.
+path, and a ``replan_breakdown`` row (from :mod:`repro.obs` spans, category
+``sched``) quantifying the ROADMAP-item-1 replan cost split by sub-phase.
 
-Each scenario reports wall-clock (best of ``reps``), scheduler check-ins/sec,
-and Venn's avg JCT; results are merged into ``BENCH_hotpath.json`` at the
-repo root (merge, not overwrite: FAST runs skip the expensive rows and must
-not wipe them) so the perf trajectory is tracked across PRs.
+Each scenario reports wall-clock (best of ``reps``), scheduler check-in
+rates, and Venn's avg JCT; results are merged into ``BENCH_hotpath.json`` at
+the repo root (merge, not overwrite: FAST runs skip the expensive rows and
+must not wipe them) so the perf trajectory is tracked across PRs.
+
+Rate keys: ``seen_per_sec`` counts check-ins the scheduler actually examined;
+``total_per_sec`` additionally counts liveness-bitmap/idle skips.
+``checkins_per_sec`` is DEPRECATED — it equals ``total_per_sec`` (the old
+key divided seen + skipped by wall time, inflating the headline rate with
+skips) and is kept only for continuity of the tracked JSON.
 """
 from __future__ import annotations
 
@@ -36,7 +43,9 @@ from pathlib import Path
 import tempfile
 
 from .common import FAST, emit
+from repro import obs
 from repro.core import SCHEDULERS
+from repro.obs.summarize import span_stats
 from repro.scenarios import fast_scaled, get_scenario, run_one
 from repro.sim import JobTraceConfig, PopulationConfig, SimConfig, generate_jobs
 from repro.sim.devices import REQ_HIGHPERF
@@ -64,13 +73,17 @@ def run_scenario(base_rate: float, num_jobs: int, days: int, seed: int = 1):
     t0 = time.time()
     metrics = sim.run()
     wall = time.time() - t0
+    total = sim.checkins_seen + sim.checkins_skipped
     return {
         "wall_s": wall,
         "avg_jct_s": metrics.avg_jct,
         "unfinished": metrics.unfinished,
         "checkins_seen": sim.checkins_seen,
         "checkins_skipped": sim.checkins_skipped,
-        "checkins_per_sec": (sim.checkins_seen + sim.checkins_skipped) / wall,
+        "seen_per_sec": sim.checkins_seen / wall,
+        "total_per_sec": total / wall,
+        # DEPRECATED (== total_per_sec): see module docstring
+        "checkins_per_sec": total / wall,
         "sched_invocations": sched.sched_invocations,
     }
 
@@ -95,16 +108,30 @@ def run_tenx(engine: str, seed: int = 1):
                            cpu_med=1.8, mem_med=1.8)
     sim = Simulator(_tenx_jobs(seed), sched, pop,
                     SimConfig(max_time=0.25 * 24 * 3600.0), engine=engine)
-    t0 = time.time()
-    metrics = sim.run()
-    wall = time.time() - t0
+    # metrics-only obs session (tracing stays off — a 15M-check-in run's
+    # span volume would perturb the row it measures): the registry counters
+    # are the stopwatch source, and the decision-latency histogram rides
+    # along for free
+    with obs.session(tracing=False, metrics=True) as (_, reg):
+        t0 = time.time()
+        metrics = sim.run()
+        wall = time.time() - t0
+        drain_s = reg.counter("sim.drain_wall_s").value
+        stream_s = reg.counter("sim.stream_wall_s").value
+        lat = reg.get("sim.decision_latency_s")
+        lat_p50 = lat.percentile(50) if lat is not None else float("nan")
+        lat_p99 = lat.percentile(99) if lat is not None else float("nan")
     return {
         "wall_s": wall,
         # the check-in loop proper: drain time minus the engine-independent
         # chunk sampling/classification that happens inside it (engine-side
-        # mirror conversion is attributed to the loop)
-        "checkin_loop_s": sim.drain_seconds - sim.stream_seconds,
-        "stream_s": sim.stream_seconds,
+        # mirror conversion is attributed to the loop).  Sourced from the
+        # obs registry counters — same quantities the old ad-hoc
+        # drain_seconds/stream_seconds stopwatches tracked.
+        "checkin_loop_s": drain_s - stream_s,
+        "stream_s": stream_s,
+        "decision_latency_p50_us": lat_p50 * 1e6,
+        "decision_latency_p99_us": lat_p99 * 1e6,
         # avg JCT is censoring-dominated here (most of the 2000-job trace
         # arrives beyond the bounded horizon); completed rounds is the
         # meaningful progress number
@@ -137,6 +164,52 @@ def _tenx_row(reps: int):
     emit("hotpath_tenx_r500_j2000", row["array"]["wall_s"] * 1e6,
          f"loop={row['loop_speedup']}x e2e={row['e2e_speedup']}x "
          f"identical=True")
+    return row
+
+
+def _replan_breakdown_row(seed: int = 1):
+    """Replan cost split (ROADMAP item 1) from obs spans.
+
+    Runs the profiled workload with tracing restricted to the ``sched``
+    category (replan spans only — the drain hot path stays uninstrumented at
+    that granularity, and the filter bounds trace memory) and aggregates the
+    ``venn.replan.*`` sub-phase spans: how much wall goes to replans at all,
+    and of that, how much to supply refresh vs. IRS vs. tier decisions vs.
+    plan lowering.  The split is the prioritization signal for making the
+    replan array-native."""
+    base_rate, num_jobs, days = (1.5, 20, 10) if FAST else (1.5, 50, 30)
+    jobs = generate_jobs(JobTraceConfig(num_jobs=num_jobs, seed=seed))
+    sched = SCHEDULERS["venn"](seed=seed)
+    pop = PopulationConfig(seed=1000 + seed, base_rate=base_rate)
+    sim = Simulator(jobs, sched, pop,
+                    SimConfig(max_time=days * 24 * 3600.0))
+    with obs.session(tracing=True, metrics=True,
+                     categories={"sched"}) as (tr, reg):
+        t0 = time.time()
+        sim.run()
+        wall = time.time() - t0
+        stats = span_stats(tr.events)
+        hist = reg.get("venn.replan_wall_s")
+    replan = stats.get("venn.replan", {"count": 0, "total_us": 0.0})
+    total_s = replan["total_us"] / 1e6
+    phases_s = {
+        ph: stats.get(f"venn.replan.{ph}", {"total_us": 0.0})["total_us"] / 1e6
+        for ph in ("supply", "irs", "tiers", "compile")
+    }
+    row = {
+        "wall_s": wall,
+        "replans": replan["count"],
+        "replan_total_s": round(total_s, 4),
+        "replan_frac_of_wall": round(total_s / wall, 4) if wall else 0.0,
+        "p50_replan_s": hist.percentile(50) if hist is not None else None,
+        "p99_replan_s": hist.percentile(99) if hist is not None else None,
+        "phases_s": {k: round(v, 4) for k, v in phases_s.items()},
+        "phase_frac": {k: round(v / total_s, 3) if total_s else 0.0
+                       for k, v in phases_s.items()},
+    }
+    emit("hotpath_replan_breakdown", total_s * 1e6,
+         f"replans={row['replans']} frac_of_wall={row['replan_frac_of_wall']} "
+         + " ".join(f"{k}={row['phase_frac'][k]}" for k in phases_s))
     return row
 
 
@@ -232,6 +305,7 @@ def main():
     if not FAST:
         results["tenx_r500_j2000"] = _tenx_row(reps=3)
 
+    results["replan_breakdown"] = _replan_breakdown_row()
     results["scenario_replay_flash_crowd"] = _scenario_replay_row()
     results["fault_sweep"] = _fault_sweep_row()
 

@@ -38,6 +38,8 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+from ..obs import metrics as _obsmetrics
+from ..obs import trace as _obstrace
 from .state import MatchState
 
 __all__ = ["ArrayMatchEngine", "MatchResult", "SEG_ROWS", "match_chunk",
@@ -151,7 +153,7 @@ def match_chunk(atom_ids: np.ndarray, speeds: np.ndarray,
     fillpos = np.where(rem > 0, n, -1).astype(np.int64)
     iters = max_iters if max_iters is not None else R + 2
     choice = None
-    for _ in range(iters):
+    for it in range(iters):
         avail = elig & (fillpos[safe] >= pos[:, None])
         anyav = avail.any(axis=1)
         kfirst = np.argmax(avail, axis=1)
@@ -162,6 +164,11 @@ def match_chunk(atom_ids: np.ndarray, speeds: np.ndarray,
             last = rank_s == rem[ch_s] - 1        # the filling grant per req
             new_fill[ch_s[last]] = p_s[last]
         if np.array_equal(new_fill, fillpos):
+            reg = _obsmetrics.REGISTRY
+            if reg.enabled:
+                reg.histogram("accel.fixedpoint_iters",
+                              lo=1.0, hi=1e3,
+                              buckets_per_decade=20).record(it + 1)
             granted = np.zeros(n, dtype=bool)
             granted[p_s] = rank_s < rem[ch_s]
             return MatchResult(choice, granted)
@@ -177,6 +184,13 @@ def match_chunk(atom_ids: np.ndarray, speeds: np.ndarray,
 
 def _pow2(x: int) -> int:
     return 1 << max(0, (x - 1)).bit_length()
+
+
+# padded shapes already dispatched (per process): a jax call at an unseen
+# shape compiles; at a seen shape it only executes.  Used to label trace
+# spans — populated only while tracing, so an enable() mid-run labels the
+# first call per shape as compiling even if jit already cached it.
+_seen_jax_shapes: set = set()
 
 
 def match_chunk_jax(atom_ids: np.ndarray, speeds: np.ndarray,
@@ -207,10 +221,22 @@ def match_chunk_jax(atom_ids: np.ndarray, speeds: np.ndarray,
     elig_p[:n, :elig.shape[1]] = elig
     rem_p = np.zeros(rp, dtype=np.int32)
     rem_p[:R] = rem
+    tr = _obstrace.TRACER
+    if tr.enabled:
+        shape = (np_pad, rp, kp, use_kernel)
+        name = "accel.jax.exec" if shape in _seen_jax_shapes \
+            else "accel.jax.compile+exec"
+        _seen_jax_shapes.add(shape)
+        tok = tr.begin(name, cat="accel", n=np_pad, r=rp, k=kp)
+    else:
+        tok = None
     choice, granted = _match_jax(jnp.asarray(reqix_p), jnp.asarray(elig_p),
                                  jnp.asarray(rem_p), use_kernel=use_kernel)
-    return MatchResult(np.asarray(choice)[:n].astype(np.int64),
-                       np.asarray(granted)[:n])
+    out = MatchResult(np.asarray(choice)[:n].astype(np.int64),
+                      np.asarray(granted)[:n])
+    if tok is not None:
+        tr.end(tok)
+    return out
 
 
 # --------------------------------------------------------------------------- #
@@ -277,17 +303,27 @@ class ArrayMatchEngine:
                     rem[i] = 0
             self.stale_plans_served += 1
             self.staleness_s += now - self._last_replan_t
+            tr = _obstrace.TRACER
+            if tr.enabled:
+                tr.instant("accel.stale_plan", cat="accel", sim_t=now,
+                           age_s=now - self._last_replan_t)
             return st
         was_dirty = bool(getattr(sched, "_plan_dirty", True))
         sched.prepare_match(now)
         token = sched.match_token()
         st = self.state
         if st is None or st.token != token:
+            tr = _obstrace.TRACER
+            tok = tr.begin("accel.state_rebuild", cat="accel") \
+                if tr.enabled else None
             st = self.state = MatchState.from_scheduler(
                 sched, token, kcap=self.kcap,
                 # exported prefixes keep the per-replan rebuild
                 # O(atoms x limit); exhaustion re-exports wider
                 export_limit=max(4 * self.kcap, 128))
+            if tok is not None:
+                tr.end(tok, num_atoms=st.num_atoms,
+                       requests=len(st.requests))
             # NOTE: classify() can intern new atom ids without a version
             # bump, so callers must re-check num_atoms per segment —
             # miss_free alone only certifies the id space seen at build
@@ -306,6 +342,21 @@ class ArrayMatchEngine:
         out by the caller).  Rows of candidate-free atoms can never match, so
         the fixed point runs on the live subset only; dead traffic costs one
         gather."""
+        tr = _obstrace.TRACER
+        if not tr.enabled:
+            return self._match_impl(atom_ids, speeds)
+        tok = tr.begin("accel.match", cat="accel", rows=len(atom_ids),
+                       backend=self.backend)
+        try:
+            res = self._match_impl(atom_ids, speeds)
+        except NeedWiderExport:
+            tr.end(tok, outcome="need_wider_export")
+            raise
+        tr.end(tok, granted=int(res.granted.sum()))
+        return res
+
+    def _match_impl(self, atom_ids: np.ndarray, speeds: np.ndarray
+                    ) -> MatchResult:
         self.segments += 1
         st = self.state
         n = len(atom_ids)
@@ -331,6 +382,9 @@ class ArrayMatchEngine:
             if not suspect.any():
                 break
             self.expansions += 1
+            tr = _obstrace.TRACER
+            if tr.enabled:
+                tr.instant("accel.expand", cat="accel", kcap=st.kcap)
             if not st.expand():
                 # the stored rows themselves were export-capped prefixes:
                 # widen the cap and have the caller rebuild + re-match
@@ -355,8 +409,7 @@ class ArrayMatchEngine:
             # reject NaN/inf rows exactly like the scalar engine's checkin
             # does, while backend kernels aren't audited for non-finite
             # inputs — serve the whole segment scalar-side
-            self.degraded_segments += 1
-            return match_chunk_seq(sub_ids, sub_speeds, st)
+            return self._degrade("nonfinite", sub_ids, sub_speeds, st)
         try:
             if self.backend == "jax":
                 res = match_chunk_jax(sub_ids, sub_speeds, st,
@@ -364,12 +417,20 @@ class ArrayMatchEngine:
             else:
                 res = match_chunk(sub_ids, sub_speeds, st)
         except Exception:
-            self.degraded_segments += 1
-            return match_chunk_seq(sub_ids, sub_speeds, st)
+            return self._degrade("exception", sub_ids, sub_speeds, st)
         if not self._plausible(res, len(sub_ids), st):
-            self.degraded_segments += 1
-            return match_chunk_seq(sub_ids, sub_speeds, st)
+            return self._degrade("implausible", sub_ids, sub_speeds, st)
         return res
+
+    def _degrade(self, reason: str, sub_ids: np.ndarray,
+                 sub_speeds: np.ndarray, st: MatchState) -> MatchResult:
+        """Serve one segment through the sequential oracle, counted + traced."""
+        self.degraded_segments += 1
+        tr = _obstrace.TRACER
+        if tr.enabled:
+            tr.instant("accel.degraded", cat="accel", reason=reason,
+                       rows=len(sub_ids))
+        return match_chunk_seq(sub_ids, sub_speeds, st)
 
     @staticmethod
     def _plausible(res: MatchResult, m: int, st: MatchState) -> bool:

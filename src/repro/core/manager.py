@@ -20,10 +20,13 @@ from __future__ import annotations
 
 import math
 import random
+import time
 from typing import Dict, FrozenSet, List, Optional
 
 import numpy as np
 
+from ..obs import metrics as _obsmetrics
+from ..obs import trace as _obstrace
 from .baselines import BaseScheduler
 from .dispatch import DispatchTable, MISS, compile_plan
 from .eligibility import EligibilityIndex
@@ -229,6 +232,16 @@ class VennScheduler(BaseScheduler):
     def _reschedule(self, now: float) -> None:
         self.sched_invocations += 1
         self._plan_dirty = False
+        # observability: the replan is the ROADMAP item 1 hotspot — span the
+        # whole VENN-SCHED run plus its sub-phases (supply absorb, IRS,
+        # tier decisions, plan lowering) so traces show where replans go
+        tr = _obstrace.TRACER
+        reg = _obsmetrics.REGISTRY
+        t_replan = time.perf_counter() if reg.enabled else 0.0
+        tok = tr.begin("venn.replan", cat="sched", sim_t=now) \
+            if tr.enabled else None
+        sub = tr.begin("venn.replan.supply", cat="sched") \
+            if tr.enabled else None
         self._absorb_feed(now)
         self.supply.advance(now)
         # one batched eviction+rate pass over the stacked supply rings
@@ -245,9 +258,12 @@ class VennScheduler(BaseScheduler):
             g.atom_rates = {a: float(rates[id_of(a)]) for a in g.eligible_atoms}
             g.supply = sum(g.atom_rates.values())
             g.allocation = {}
+        if sub is not None:
+            tr.end(sub, atoms=len(atoms), groups=len(active_groups))
 
         num_jobs = sum(len(g.pending_jobs()) for g in active_groups)
         solo = lambda j: self._solo_jct(j)
+        sub = tr.begin("venn.replan.irs", cat="sched") if tr.enabled else None
         if self.enable_irs:
             # queue lengths are fixed within one VENN-SCHED run; cache them
             # (the greedy reallocation queries them per donor pair)
@@ -266,19 +282,34 @@ class VennScheduler(BaseScheduler):
             )
         else:  # ablation "Venn w/o scheduling": FIFO order, matching only
             self.plan = self._fifo_plan(active_groups, atoms)
+        if sub is not None:
+            tr.end(sub, jobs=num_jobs)
 
         # cover every known atom so idle/ineligible check-ins never replan
         for a in atoms:
             self.plan.atom_priority.setdefault(a, [])
 
+        sub = tr.begin("venn.replan.tiers", cat="sched") if tr.enabled else None
         if self.enable_matching:
             self._decide_tiers(now)
         else:
             self.tier_decisions.clear()
+        if sub is not None:
+            tr.end(sub, decisions=len(self.tier_decisions))
 
+        sub = tr.begin("venn.replan.compile", cat="sched") \
+            if tr.enabled else None
         self.dispatch = compile_plan(self.plan, self.index.intern,
                                      self.index.num_atoms, self.tier_decisions)
         self._live[:] = self.dispatch.live_list()
+        if sub is not None:
+            tr.end(sub, num_atoms=self.index.num_atoms)
+        if tok is not None:
+            tr.end(tok, jobs=num_jobs, groups=len(active_groups))
+        if reg.enabled:
+            reg.counter("venn.replans").inc()
+            reg.histogram("venn.replan_wall_s", lo=1e-7, hi=1e2).record(
+                time.perf_counter() - t_replan)
 
     def _decide_tiers(self, now: float) -> None:
         kept: Dict[int, TierDecision] = {}

@@ -27,6 +27,7 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from ..obs import trace as _obstrace
 from ..sim.devices import ChunkStream, DeviceChunk
 from .plan import FaultPlan
 
@@ -84,6 +85,7 @@ class FaultInjector:
         fi = self.plan.flaky_ingest
         if fi is None or fi.fail_prob <= 0.0:
             return self.inner.next_chunk()
+        tr = _obstrace.TRACER
         while True:
             attempt = 0
             while self._rng.random() < fi.fail_prob:
@@ -92,6 +94,10 @@ class FaultInjector:
                     break
                 self.flaky_retries += 1
                 self.backoff_total_s += fi.backoff * (2.0 ** attempt)
+                if tr.enabled:
+                    tr.instant("fault.flaky_retry", cat="fault",
+                               attempt=attempt,
+                               backoff_s=fi.backoff * (2.0 ** attempt))
                 attempt += 1
             else:
                 return self.inner.next_chunk()
@@ -100,6 +106,8 @@ class FaultInjector:
             ck = self.inner.next_chunk()
             if ck is None:
                 return None
+            if tr.enabled:
+                tr.instant("fault.flaky_giveup", cat="fault", rows=ck.n)
             self.rows_dropped_chunks += ck.n
 
     # ------------------------------------------------------ layer 2: transport
@@ -125,6 +133,9 @@ class FaultInjector:
                     and rng.random() < cc.drop_prob:
                 self.chunks_dropped += 1
                 self.rows_dropped_chunks += ck.n
+                tr = _obstrace.TRACER
+                if tr.enabled:
+                    tr.instant("fault.chunk_drop", cat="fault", rows=ck.n)
                 continue
             d = (seq, ck)
             dup = cc is not None and cc.dup_prob > 0.0 \

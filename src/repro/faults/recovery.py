@@ -26,6 +26,9 @@ import shutil
 import tempfile
 from typing import Callable, Iterable, Optional
 
+from ..obs import trace as _obstrace   # pure stdlib — keeps this module
+#                                        importable in minimal environments
+
 _MANIFEST_FORMAT = "venn-sim-snapshot"
 
 
@@ -57,6 +60,9 @@ def snapshot_simulator(sim, ckpt_dir: str, step: int) -> str:
     Returns the committed directory path.  Safe against a writer killed at
     any point: the final directory either fully exists or doesn't.
     """
+    tr = _obstrace.TRACER
+    tok = tr.begin("ckpt.snapshot", cat="ckpt", step=step) \
+        if tr.enabled else None
     os.makedirs(ckpt_dir, exist_ok=True)
     _sweep_stale_tmp(ckpt_dir)
     blob = pickle.dumps(sim, protocol=pickle.HIGHEST_PROTOCOL)
@@ -87,6 +93,8 @@ def snapshot_simulator(sim, ckpt_dir: str, step: int) -> str:
     if os.path.exists(final):
         shutil.rmtree(final)
     os.replace(tmp, final)
+    if tok is not None:
+        tr.end(tok, bytes=len(blob))
     return final
 
 
@@ -117,6 +125,9 @@ def restore_simulator(ckpt_dir: str, step: Optional[int] = None):
         step = latest_snapshot_step(ckpt_dir)
         if step is None:
             raise ValueError(f"no snapshot found under {ckpt_dir!r}")
+    tr = _obstrace.TRACER
+    tok = tr.begin("ckpt.restore", cat="ckpt", step=step) \
+        if tr.enabled else None
     final = _step_dir(ckpt_dir, step)
     manifest_path = os.path.join(final, "manifest.json")
     try:
@@ -137,6 +148,8 @@ def restore_simulator(ckpt_dir: str, step: Optional[int] = None):
     after = getattr(sim, "_after_restore", None)
     if after is not None:
         after()
+    if tok is not None:
+        tr.end(tok, bytes=manifest.get("bytes", 0))
     return sim
 
 

@@ -1,0 +1,111 @@
+"""repro.obs — zero-overhead-when-disabled observability for the repro.
+
+Three pieces, one switch:
+
+* :mod:`repro.obs.trace` — span/event tracer → Chrome trace-event JSON
+  (open in Perfetto: https://ui.perfetto.dev);
+* :mod:`repro.obs.metrics` — counters / gauges / log-bucket histograms
+  (cheap mergeable p50/p95/p99) → metrics JSONL;
+* :mod:`repro.obs.timeline` — per-job JCT decomposition (Fig. 11-style).
+
+Instrumented modules fetch the globals lazily::
+
+    from ..obs import trace as _trace, metrics as _metrics
+    ...
+    tr = _trace.TRACER
+    if tr.enabled:
+        tok = tr.begin("sim.drain", cat="sim")
+        ...
+        tr.end(tok, rows=rows)
+
+When disabled (the default) ``TRACER``/``REGISTRY`` are null singletons:
+the cost at an instrumentation site is one module-attribute fetch plus a
+bool test — no allocation, no clock read, no branch into slow code.  The
+invariant enforced by ``tests/test_obs.py``: enabling observability never
+changes simulation outcomes (``SimMetrics`` stays bit-identical on both
+drain engines), and disabling it leaves ``bench_hotpath`` wall time within
+noise (<2%).
+
+Use :func:`enable`/:func:`disable` or the :func:`session` context manager::
+
+    with obs.session(tracing=True, metrics=True) as (tracer, registry):
+        run(...)
+        tracer.write("t.json")
+        registry.write_jsonl("m.jsonl")
+
+``python -m repro.obs summarize t.json [m.jsonl]`` prints top-spans by
+self-time, histogram percentile tables, and per-job timelines.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Optional
+
+from . import metrics as _metrics_mod
+from . import trace as _trace_mod
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                      NULL_REGISTRY, read_jsonl)
+from .timeline import (JobTimeline, RoundSlice, build_timelines,
+                       render_timelines, timeline_records)
+from .trace import NULL_TRACER, Tracer, load_trace, validate_trace
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "JobTimeline", "MetricsRegistry",
+    "RoundSlice", "Tracer", "build_timelines", "disable", "enable",
+    "get_registry", "get_tracer", "load_trace", "read_jsonl",
+    "render_timelines", "session", "timeline_records", "validate_trace",
+]
+
+
+def enable(tracing: bool = True, metrics: bool = True,
+           max_events: int = 1_000_000,
+           categories=None):
+    """Install a live tracer and/or registry as the process globals.
+
+    Returns ``(tracer, registry)`` — the null singletons for whichever side
+    stays disabled.  Idempotent in the sense that each call installs *fresh*
+    instances (previous events/metrics are not carried over); pair with
+    :func:`disable` or use :func:`session`.
+    """
+    if tracing:
+        _trace_mod.TRACER = Tracer(max_events=max_events,
+                                   categories=categories)
+    if metrics:
+        _metrics_mod.REGISTRY = MetricsRegistry()
+    return _trace_mod.TRACER, _metrics_mod.REGISTRY
+
+
+def disable() -> None:
+    """Restore the null singletons (drops any recorded events/metrics that
+    were not exported)."""
+    _trace_mod.TRACER = NULL_TRACER
+    _metrics_mod.REGISTRY = NULL_REGISTRY
+
+
+def get_tracer():
+    return _trace_mod.TRACER
+
+
+def get_registry():
+    return _metrics_mod.REGISTRY
+
+
+@contextmanager
+def session(tracing: bool = True, metrics: bool = True,
+            max_events: int = 1_000_000,
+            categories=None):
+    """Scoped observability: enable on entry, always disable on exit.
+
+    Export inside the block — exiting drops unexported state::
+
+        with obs.session() as (tr, reg):
+            run(...)
+            tr.write("t.json")
+    """
+    prev_tr, prev_reg = _trace_mod.TRACER, _metrics_mod.REGISTRY
+    try:
+        yield enable(tracing=tracing, metrics=metrics,
+                     max_events=max_events, categories=categories)
+    finally:
+        _trace_mod.TRACER = prev_tr
+        _metrics_mod.REGISTRY = prev_reg

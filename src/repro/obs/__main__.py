@@ -1,0 +1,76 @@
+"""``python -m repro.obs`` — summarize recorded traces and metrics.
+
+Subcommands:
+
+* ``summarize TRACE [METRICS]`` — top spans by self-time from a Chrome
+  trace-event JSON; histogram/counter tables and per-job JCT timelines from
+  a metrics JSONL when given.
+* ``validate TRACE`` — strict shape check of a trace file (exit 1 on the
+  first offending event).
+* ``timeline METRICS`` — only the per-job JCT-decomposition bars.
+
+The input files are the artifacts of
+``python -m repro.scenarios run <name> --trace-out t.json --metrics-out m.jsonl``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .summarize import summarize_metrics, summarize_trace
+from .timeline import render_timelines, timelines_from_records
+from .metrics import read_jsonl
+from .trace import load_trace
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="Summarize repro.obs traces and metrics.")
+    sub = p.add_subparsers(dest="cmd", required=True)
+
+    ps = sub.add_parser("summarize", help="top spans + histogram tables")
+    ps.add_argument("trace", help="Chrome trace-event JSON (--trace-out)")
+    ps.add_argument("metrics", nargs="?", default=None,
+                    help="metrics JSONL (--metrics-out)")
+    ps.add_argument("--top", type=int, default=20,
+                    help="number of spans to show (default 20)")
+
+    pv = sub.add_parser("validate", help="validate a trace file's shape")
+    pv.add_argument("trace")
+
+    pt = sub.add_parser("timeline", help="per-job JCT decomposition bars")
+    pt.add_argument("metrics", help="metrics JSONL (--metrics-out)")
+
+    args = p.parse_args(argv)
+
+    if args.cmd == "summarize":
+        print(summarize_trace(args.trace, limit=args.top))
+        if args.metrics:
+            print()
+            print(summarize_metrics(args.metrics))
+        return 0
+
+    if args.cmd == "validate":
+        try:
+            doc = load_trace(args.trace)
+        except ValueError as e:
+            print(f"INVALID: {e}", file=sys.stderr)
+            return 1
+        print(f"OK: {len(doc['traceEvents'])} events")
+        return 0
+
+    if args.cmd == "timeline":
+        tls = timelines_from_records(read_jsonl(args.metrics))
+        if not tls:
+            print("(no timeline records — was the run made with "
+                  "--metrics-out?)", file=sys.stderr)
+            return 1
+        print(render_timelines(tls))
+        return 0
+
+    return 2
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -52,6 +52,13 @@ def build_parser() -> argparse.ArgumentParser:
                      help="simulator drain engine: per-device scalar loop or "
                           "batched array matching (repro.accel) — identical "
                           "metrics, different wall-clock")
+    run.add_argument("--trace-out", default=None, metavar="PATH",
+                     help="write a Chrome trace-event JSON of the runs "
+                          "(open in Perfetto; summarize with "
+                          "`python -m repro.obs summarize PATH`)")
+    run.add_argument("--metrics-out", default=None, metavar="PATH",
+                     help="write a metrics JSONL (histograms, counters, "
+                          "per-job JCT-decomposition timeline records)")
 
     rep = sub.add_parser("replay", help="run a scenario's jobs over a "
                                         "recorded device trace")
@@ -78,26 +85,38 @@ def main(argv: Optional[List[str]] = None) -> int:
         else:
             print("error: give a scenario name or --all", file=sys.stderr)
             return 2
+        def per_scenario(path: Optional[str], name: str) -> Optional[str]:
+            # one output file per scenario (never silently overwrite);
+            # split on the basename only — dots in directories stay put
+            if path is None or len(names) == 1:
+                return path
+            p = Path(path)
+            new = f"{p.stem}.{name}{p.suffix}" if p.suffix \
+                else f"{p.name}.{name}"
+            return str(p.with_name(new))
+
         for name in names:
             spec = get_scenario(name)
-            record = args.record
-            if record is not None and len(names) > 1:
-                # one trace file per scenario (never silently overwrite);
-                # split on the basename only — dots in directories stay put
-                p = Path(record)
-                new = f"{p.stem}.{name}{p.suffix}" if p.suffix \
-                    else f"{p.name}.{name}"
-                record = str(p.with_name(new))
+            record = per_scenario(args.record, name)
+            trace_out = per_scenario(args.trace_out, name)
+            metrics_out = per_scenario(args.metrics_out, name)
             try:
                 results = run_scenario(spec, scheds=args.sched,
                                        seeds=args.seeds, fast=args.fast,
-                                       record=record, engine=args.engine)
+                                       record=record, engine=args.engine,
+                                       trace_out=trace_out,
+                                       metrics_out=metrics_out)
             except ValueError as e:
                 print(f"error: {e}", file=sys.stderr)
                 return 2
             print(f"\n== {spec.name} ==  {spec.description}")
             if record is not None:
                 print(f"(device stream recorded to {record})")
+            if trace_out is not None:
+                print(f"(trace written to {trace_out} — "
+                      f"`python -m repro.obs summarize {trace_out}`)")
+            if metrics_out is not None:
+                print(f"(metrics written to {metrics_out})")
             print(comparison_table(results))
         return 0
     if args.cmd == "replay":

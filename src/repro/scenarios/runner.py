@@ -9,14 +9,19 @@ scenario's shape) and of trace record/replay orchestration.
 from __future__ import annotations
 
 import time
+from contextlib import nullcontext
 from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from .. import obs
 from ..core import SCHEDULERS
 from ..core.types import Job
 from ..faults.injector import FaultInjector
+from ..obs.metrics import NULL_REGISTRY
+from ..obs.timeline import timeline_records
+from ..obs.trace import NULL_TRACER
 from ..sim.metrics import SimMetrics
 from ..sim.simulator import Simulator
 from .spec import ScenarioSpec, get_scenario
@@ -106,7 +111,9 @@ def run_scenario(spec_or_name, scheds: Sequence[str] = DEFAULT_SCHEDS,
                  seeds: Sequence[int] = (0,), fast: bool = False,
                  record: Optional[str] = None,
                  replay: Optional[str] = None,
-                 engine: Optional[str] = None) -> List[RunResult]:
+                 engine: Optional[str] = None,
+                 trace_out: Optional[str] = None,
+                 metrics_out: Optional[str] = None) -> List[RunResult]:
     """Run a scenario across schedulers × seeds.
 
     With ``record``, the first scheduler's run is recorded.  The device
@@ -114,7 +121,14 @@ def run_scenario(spec_or_name, scheds: Sequence[str] = DEFAULT_SCHEDS,
     recorder drains the stream to the full horizon on close, so one trace
     faithfully represents every scheduler *at that seed*.  Different seeds
     draw different device streams, so recording is limited to single-seed
-    runs."""
+    runs.
+
+    ``trace_out``/``metrics_out`` turn on :mod:`repro.obs` for the whole
+    sweep: ``trace_out`` writes a Perfetto-loadable Chrome trace-event JSON
+    (one ``run:<scenario>:<sched>:s<seed>`` span bracketing each run);
+    ``metrics_out`` writes a metrics JSONL (histograms/counters plus
+    ``kind="timeline"`` per-job JCT-decomposition records).  Observability
+    never changes simulation outcomes — metrics stay bit-identical."""
     spec = get_scenario(spec_or_name) if isinstance(spec_or_name, str) \
         else spec_or_name
     if record is not None and len(seeds) > 1:
@@ -123,15 +137,35 @@ def run_scenario(spec_or_name, scheds: Sequence[str] = DEFAULT_SCHEDS,
                          "at a time")
     if fast:
         spec = fast_scaled(spec)
+    obs_on = trace_out is not None or metrics_out is not None
+    ctx = obs.session(tracing=trace_out is not None,
+                      metrics=metrics_out is not None) if obs_on \
+        else nullcontext((NULL_TRACER, NULL_REGISTRY))
     results: List[RunResult] = []
-    first = True
-    for sched_name in scheds:
-        for seed in seeds:
-            results.append(run_one(
-                spec, sched_name, seed,
-                record=record if first else None, replay=replay,
-                engine=engine))
-            first = False
+    tl_records: List[dict] = []
+    with ctx as (tr, reg):
+        first = True
+        for sched_name in scheds:
+            for seed in seeds:
+                tok = tr.begin(f"run:{spec.name}:{sched_name}:s{seed}",
+                               cat="run") if tr.enabled else None
+                r = run_one(
+                    spec, sched_name, seed,
+                    record=record if first else None, replay=replay,
+                    engine=engine)
+                if tok is not None:
+                    tr.end(tok, wall_s=r.wall)
+                results.append(r)
+                first = False
+                if metrics_out is not None:
+                    tl_records.extend(timeline_records(
+                        r.metrics, scenario=spec.name, scheduler=sched_name,
+                        seed=seed))
+        # export inside the session — exiting drops unexported state
+        if trace_out is not None:
+            tr.write(trace_out)
+        if metrics_out is not None:
+            reg.write_jsonl(metrics_out, mode="w", extra=tl_records)
     return results
 
 
@@ -151,19 +185,23 @@ def comparison_table(results: List[RunResult]) -> str:
     by_sched: Dict[str, List[RunResult]] = {}
     for r in results:
         by_sched.setdefault(r.scheduler, []).append(r)
-    header = (f"{'scheduler':<10} {'avg_jct_s':>10} {'sched_delay_s':>13} "
+    header = (f"{'scheduler':<10} {'avg_jct_s':>10} {'p99_jct_s':>10} "
+              f"{'sched_delay_s':>13} {'p99_delay_s':>11} "
               f"{'resp_coll_s':>11} {'aborts':>6} {'failed':>6} "
               f"{'unfin':>5} {'wall_s':>7}")
     lines = [header, "-" * len(header)]
     for name, runs in by_sched.items():
         jct = float(np.mean([r.metrics.avg_jct for r in runs]))
+        p99j = float(np.mean([r.metrics.p99_jct for r in runs]))
         sd = float(np.mean([r.metrics.avg_scheduling_delay for r in runs]))
+        p99d = float(np.mean([r.metrics.p99_scheduling_delay for r in runs]))
         rc = float(np.mean([r.metrics.avg_response_collection for r in runs]))
         ab = float(np.mean([r.metrics.aborts for r in runs]))
         fr = float(np.mean([r.metrics.failed_rounds for r in runs]))
         un = float(np.mean([r.metrics.unfinished for r in runs]))
         wall = float(np.mean([r.wall for r in runs]))
-        lines.append(f"{name:<10} {jct:>10.0f} {sd:>13.0f} {rc:>11.0f} "
+        lines.append(f"{name:<10} {jct:>10.0f} {p99j:>10.0f} {sd:>13.0f} "
+                     f"{p99d:>11.0f} {rc:>11.0f} "
                      f"{ab:>6.1f} {fr:>6.1f} {un:>5.1f} {wall:>7.2f}")
     scheds = list(by_sched)
     if len(scheds) > 1:

@@ -113,10 +113,32 @@ class SimMetrics:
             "flaky_retries": self.flaky_retries,
         }
 
+    def _jct_percentile(self, q: float) -> float:
+        vals = list(self.jcts.values())
+        return float(np.percentile(vals, q)) if vals else float("nan")
+
+    @property
+    def p50_jct(self) -> float:
+        return self._jct_percentile(50.0)
+
+    @property
+    def p99_jct(self) -> float:
+        return self._jct_percentile(99.0)
+
+    @property
+    def p99_scheduling_delay(self) -> float:
+        if not self.rounds:
+            return float("nan")
+        return float(np.percentile(
+            [r.scheduling_delay for r in self.rounds], 99.0))
+
     def summary(self) -> Dict[str, float]:
         return {
             "avg_jct": self.avg_jct,
+            "p50_jct": self.p50_jct,
+            "p99_jct": self.p99_jct,
             "avg_scheduling_delay": self.avg_scheduling_delay,
+            "p99_scheduling_delay": self.p99_scheduling_delay,
             "avg_response_collection": self.avg_response_collection,
             "aborts": float(self.aborts),
             "failed_rounds": float(self.failed_rounds),

@@ -57,12 +57,18 @@ import numpy as np
 
 from ..core.baselines import BaseScheduler
 from ..core.types import Device, Job, JobRequest, JobStatus
+from ..obs import metrics as _obsmetrics
+from ..obs import trace as _obstrace
 from .devices import (ChunkStream, DeviceChunk, DeviceGenerator,
                       GeneratorStream, PopulationConfig, fails_from,
                       response_time_from)
 from .metrics import RoundRecord, SimMetrics
 
 JOB_ARRIVAL, RESPONSE, DEADLINE, FAULT = 0, 1, 2, 3
+
+# control-event span names, indexed by event kind (repro.obs taxonomy)
+_EVENT_SPAN = ("sim.event.arrival", "sim.event.response",
+               "sim.event.deadline", "sim.event.fault")
 
 
 @dataclass
@@ -178,11 +184,34 @@ class Simulator:
         drain = self._drain_array if self.engine is not None \
             else self._drain_python
         perf = time.perf_counter
+        # observability globals, fetched once per step_until call (enable
+        # observability before driving the loop — obs.session around run).
+        # Disabled cost inside the loop: two cached-bool tests per iteration.
+        tr = _obstrace.TRACER
+        reg = _obsmetrics.REGISTRY
+        obs_on = tr.enabled or reg.enabled
+        engine_name = "array" if self.engine is not None else "python"
         while self._done < n_jobs:
             # ---- drain device check-ins until the heap takes priority ----
             t0 = perf()
+            seen0 = self.checkins_seen
             stopped = drain(bound)
-            self.drain_seconds += perf() - t0
+            dt = perf() - t0
+            self.drain_seconds += dt
+            if obs_on:
+                rows = self.checkins_seen - seen0
+                if reg.enabled:
+                    reg.counter("sim.drain_wall_s").inc(dt)
+                    if rows:
+                        reg.counter("sim.checkins_seen").inc(rows)
+                        # per-check-in decision latency, attributed from the
+                        # segment wall time (observe, don't perturb the loop)
+                        reg.histogram("sim.decision_latency_s",
+                                      lo=1e-9, hi=1.0).record(dt / rows,
+                                                              n=rows)
+                if rows and tr.enabled:
+                    tr.complete("sim.drain", tr.us(t0), dt * 1e6, cat="sim",
+                                rows=rows, engine=engine_name, sim_now=self.now)
             if stopped:
                 # a check-in crossed the bound; only a horizon crossing ends
                 # the simulation — a pause bound leaves it resumable
@@ -196,6 +225,8 @@ class Simulator:
                 return t > max_time
             _, _, kind, payload = heappop(heap)
             self.now = t
+            tok = tr.begin(_EVENT_SPAN[kind], cat="sim", sim_t=t) \
+                if tr.enabled else None
             if kind == JOB_ARRIVAL:
                 self._on_job_arrival(payload)           # type: ignore[arg-type]
             elif kind == RESPONSE:
@@ -204,6 +235,8 @@ class Simulator:
                 self._on_deadline(payload)              # type: ignore[arg-type]
             elif kind == FAULT:
                 self._on_blackout(payload)              # type: ignore[arg-type]
+            if tok is not None:
+                tr.end(tok)
         return True
 
     def finish(self) -> SimMetrics:
@@ -521,10 +554,23 @@ class Simulator:
     def _load_next_chunk(self) -> None:
         """Pull chunks from the stream until one has check-ins (or it ends)."""
         t0 = time.perf_counter()
+        s0 = self.stream_seconds
         try:
             self._load_next_chunk_inner()
         finally:
             self.stream_seconds += time.perf_counter() - t0
+            tr = _obstrace.TRACER
+            if tr.enabled:
+                # span over the engine-comparable stream time (the inner
+                # loop backs the scalar mirror conversion out of the total)
+                tr.complete("sim.chunk_load", tr.us(t0),
+                            (self.stream_seconds - s0) * 1e6, cat="sim",
+                            rows=self._chunk.n if self._chunk is not None
+                            else 0)
+            reg = _obsmetrics.REGISTRY
+            if reg.enabled:
+                reg.counter("sim.stream_wall_s").inc(
+                    self.stream_seconds - s0)
 
     def _load_next_chunk_inner(self) -> None:
         self._chunk = None
@@ -604,6 +650,7 @@ class Simulator:
         Deterministic across drain engines: job order, buffer layout, and RNG
         draw order are all grant-order artifacts, which are bit-identical."""
         rng = self._fault_rng
+        total_revoked = 0
         for job in self.jobs:
             req = job.current
             if req is None:
@@ -621,6 +668,7 @@ class Simulator:
                     keep.append(e)
             if not revoked:
                 continue
+            total_revoked += revoked
             self.metrics.revoked_responses += revoked
             heapq.heapify(keep)
             req.resp_buf = keep or None
@@ -631,6 +679,10 @@ class Simulator:
                 req.resp_t = head
                 if keep:
                     self._push(head, RESPONSE, req)
+        tr = _obstrace.TRACER
+        if tr.enabled:
+            tr.instant("fault.blackout", cat="fault", sim_t=self.now,
+                       revoked=total_revoked)
 
     def _collect_resilience(self) -> None:
         """Fold engine- and stream-side fault counters into the metrics."""

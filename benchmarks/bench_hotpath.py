@@ -22,22 +22,31 @@ the fault-free baseline) so resilience features stay accountable on the hot
 path, and a ``replan_breakdown`` row (from :mod:`repro.obs` spans, category
 ``sched``) quantifying the ROADMAP-item-1 replan cost split by sub-phase.
 
+Also an ``audit_overhead`` row: the profiled workload with the
+:mod:`repro.obs.audit` flight recorder enabled vs. disabled — metrics must
+stay bit-identical and the wall-clock overhead under 5%.
+
 Each scenario reports wall-clock (best of ``reps``), scheduler check-in
 rates, and Venn's avg JCT; results are merged into ``BENCH_hotpath.json`` at
 the repo root (merge, not overwrite: FAST runs skip the expensive rows and
-must not wipe them) so the perf trajectory is tracked across PRs.
+must not wipe them), and the headline numbers are *appended* to
+``BENCH_history.jsonl`` keyed by commit + workload + host — the append-only
+series ``python -m benchmarks.regress`` checks tolerance bands against (the
+CI perf gate).
 
 Rate keys: ``seen_per_sec`` counts check-ins the scheduler actually examined;
-``total_per_sec`` additionally counts liveness-bitmap/idle skips.
-``checkins_per_sec`` is DEPRECATED — it equals ``total_per_sec`` (the old
-key divided seen + skipped by wall time, inflating the headline rate with
-skips) and is kept only for continuity of the tracked JSON.
+``total_per_sec`` additionally counts liveness-bitmap/idle skips.  (The old
+``checkins_per_sec`` alias — which equaled ``total_per_sec`` and inflated
+the headline rate with skips — is no longer emitted.)
 """
 from __future__ import annotations
 
 import json
 import os
+import platform
+import subprocess
 import time
+from contextlib import nullcontext
 from pathlib import Path
 
 import tempfile
@@ -82,8 +91,6 @@ def run_scenario(base_rate: float, num_jobs: int, days: int, seed: int = 1):
         "checkins_skipped": sim.checkins_skipped,
         "seen_per_sec": sim.checkins_seen / wall,
         "total_per_sec": total / wall,
-        # DEPRECATED (== total_per_sec): see module docstring
-        "checkins_per_sec": total / wall,
         "sched_invocations": sched.sched_invocations,
     }
 
@@ -271,6 +278,122 @@ def _fault_sweep_row():
     return row
 
 
+def _audit_overhead_row(seed: int = 1):
+    """Flight-recorder cost on the profiled workload: audit on vs. off.
+
+    The acceptance bar for :mod:`repro.obs.audit`: enabling the recorder
+    must leave ``SimMetrics`` bit-identical and cost <5%.  The overhead
+    fraction is computed from CPU time (``time.process_time``) over
+    *interleaved* on/off pairs, taking the min of each side: wall-clock on a
+    shared machine swings +-15% between back-to-back identical runs, which
+    would drown a 5% signal; interleaving shares the machine phase across
+    both sides and min-of-reps strips additive noise."""
+    base_rate, num_jobs, days = (1.5, 20, 10) if FAST else (1.5, 50, 30)
+    reps = 5 if FAST else 4
+
+    def one(audit: bool):
+        jobs = generate_jobs(JobTraceConfig(num_jobs=num_jobs, seed=seed))
+        sched = SCHEDULERS["venn"](seed=seed)
+        pop = PopulationConfig(seed=1000 + seed, base_rate=base_rate)
+        sim = Simulator(jobs, sched, pop,
+                        SimConfig(max_time=days * 24 * 3600.0))
+        ctx = obs.session(tracing=False, metrics=False, audit=True) \
+            if audit else nullcontext()
+        with ctx:
+            w0 = time.time()
+            c0 = time.process_time()
+            metrics = sim.run()
+            cpu = time.process_time() - c0
+            wall = time.time() - w0
+            n_rec = len(obs.get_audit().records) if audit else 0
+        return wall, cpu, metrics, n_rec
+
+    cpu_best = {False: float("inf"), True: float("inf")}
+    wall_best = {False: float("inf"), True: float("inf")}
+    summaries = {}
+    records = 0
+    for _ in range(reps):
+        for audit in (False, True):
+            wall, cpu, metrics, n_rec = one(audit)
+            cpu_best[audit] = min(cpu_best[audit], cpu)
+            wall_best[audit] = min(wall_best[audit], wall)
+            summaries[audit] = metrics.summary()
+            if audit:
+                records = n_rec
+    assert summaries[True] == summaries[False], \
+        "audit capture must leave SimMetrics bit-identical"
+    frac = cpu_best[True] / cpu_best[False] - 1.0
+    row = {
+        "wall_off_s": wall_best[False],
+        "wall_on_s": wall_best[True],
+        "cpu_off_s": cpu_best[False],
+        "cpu_on_s": cpu_best[True],
+        "audit_overhead_frac": round(max(frac, 0.0), 4),
+        "audit_records": records,
+        "metrics_identical": True,
+        "meets_5pct_target": frac < 0.05,
+    }
+    emit("hotpath_audit_overhead", cpu_best[True] * 1e6,
+         f"overhead={row['audit_overhead_frac'] * 100:.1f}% "
+         f"records={records} identical=True")
+    return row
+
+
+# --------------------------------------------------------------------------- #
+# perf-regression history (BENCH_history.jsonl, checked by benchmarks.regress)
+# --------------------------------------------------------------------------- #
+
+def _git_commit() -> str:
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=Path(__file__).resolve().parent.parent, text=True,
+            stderr=subprocess.DEVNULL).strip()
+    except Exception:
+        return "unknown"
+
+
+def _bench_host() -> str:
+    # absolute wall-clock is only comparable within one machine; the regress
+    # checker scopes those metrics by this tag (override for stable CI pools)
+    return os.environ.get("REPRO_BENCH_HOST", platform.node() or "unknown")
+
+
+def append_history(results: dict, out_dir: Path) -> Path:
+    """Append this run's headline numbers to the append-only perf series.
+
+    One JSONL row per workload, keyed by commit + host + timestamp — the
+    input contract of ``python -m benchmarks.regress``."""
+    commit, host, ts = _git_commit(), _bench_host(), time.time()
+    rows = []
+    for label in ("profiled_r1.5_j50", "medium_r15_j100", "heavy_r50_j200"):
+        r = results.get(label)
+        if r:
+            rows.append((label, {
+                k: r[k] for k in ("wall_s", "seen_per_sec", "total_per_sec",
+                                  "avg_jct_s") if k in r}))
+    tenx = results.get("tenx_r500_j2000")
+    if tenx:
+        rows.append(("tenx_r500_j2000", {
+            "wall_s": tenx["array"]["wall_s"],
+            "checkin_loop_s": tenx["array"]["checkin_loop_s"],
+            "loop_speedup": tenx["loop_speedup"],
+            "e2e_speedup": tenx["e2e_speedup"]}))
+    audit = results.get("audit_overhead")
+    if audit:
+        rows.append(("audit_overhead", {
+            "wall_s": audit["wall_on_s"],
+            "audit_overhead_frac": audit["audit_overhead_frac"]}))
+    path = out_dir / "BENCH_history.jsonl"
+    with open(path, "a") as fh:
+        for workload, metrics in rows:
+            fh.write(json.dumps({
+                "commit": commit, "ts": round(ts, 2), "host": host,
+                "fast": FAST, "workload": workload, "metrics": metrics,
+            }) + "\n")
+    return path
+
+
 def main():
     results = {}
     for label, base_rate, num_jobs, days, reps in SCENARIOS:
@@ -283,7 +406,7 @@ def main():
                 best = r
         results[label] = best
         emit(f"hotpath_{label}", best["wall_s"] * 1e6,
-             f"wall={best['wall_s']:.2f}s ckps={best['checkins_per_sec']:.0f} "
+             f"wall={best['wall_s']:.2f}s seen_ps={best['seen_per_sec']:.0f} "
              f"jct={best['avg_jct_s']:.0f}s")
 
     prof = results.get("profiled_r1.5_j50")
@@ -308,6 +431,7 @@ def main():
     results["replan_breakdown"] = _replan_breakdown_row()
     results["scenario_replay_flash_crowd"] = _scenario_replay_row()
     results["fault_sweep"] = _fault_sweep_row()
+    results["audit_overhead"] = _audit_overhead_row()
 
     out = Path(os.environ.get("REPRO_BENCH_OUT",
                               Path(__file__).resolve().parent.parent))
@@ -320,8 +444,15 @@ def main():
             merged = json.loads(out_path.read_text())
         except ValueError:
             merged = {}
+    # drop the deprecated alias wherever a previous run left it
+    for row in merged.values():
+        if isinstance(row, dict):
+            row.pop("checkins_per_sec", None)
     merged.update(results)
     out_path.write_text(json.dumps(merged, indent=2))
+    hist = append_history(results, out)
+    emit("hotpath_history", 0,
+         f"appended to {hist.name} (check: python -m benchmarks.regress)")
     return results
 
 

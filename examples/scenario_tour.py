@@ -1,14 +1,18 @@
-"""Tour of the scenario engine: declarative scenarios, trace record/replay.
+"""Tour of the scenario engine: declarative scenarios, trace record/replay,
+and the scheduler flight recorder.
 
 Runs two contrasting scenarios across venn + random, prints the comparison
-tables, then records one run's device stream to a trace file and replays it
-bit-identically.
+tables, records one run's device stream to a trace file and replays it
+bit-identically, then walks through explaining one scheduling decision from
+an audit stream.
 
     PYTHONPATH=src python examples/scenario_tour.py
 """
 import os
 import tempfile
 
+from repro.obs.audit import read_audit
+from repro.obs.contention import explain_job, pressure_timelines
 from repro.scenarios import (comparison_table, fast_scaled, get_scenario,
                              run_one, run_scenario, scenario_names)
 
@@ -35,6 +39,31 @@ def main() -> None:
               and rec.metrics.rounds == rep.metrics.rounds)
     finally:
         os.unlink(trace)
+
+    # --- explain a scheduling decision from the flight recorder -----------
+    # The audit stream answers "why did job J wait?" after the fact: its
+    # queue-position history names the exact contending jobs ahead of it
+    # (with the fairness keys that ordered them), and its sampled grant rows
+    # show which dispatch-table slot won each round's opening check-in.
+    spec = fast_scaled(get_scenario("priority_tenants"))
+    with tempfile.NamedTemporaryFile(suffix=".jsonl", delete=False) as f:
+        audit = f.name
+    try:
+        run_scenario(spec, scheds=("venn",), seeds=(0,), audit_out=audit)
+        recs = read_audit(audit)
+        # pick a job that actually queued behind someone
+        jid = next((r["job"] for r in recs
+                    if r["kind"] == "queue_pos" and r["pos"] > 0),
+                   next(r["job"] for r in recs if r["kind"] == "queue_pos"))
+        print(f"\n== explain job {jid} (from {len(recs)} audit records) ==")
+        print(explain_job(recs, jid))
+        print("\n== per-atom pressure (queued demand / supply rate) ==")
+        print(pressure_timelines(recs, top=4))
+        print("\n(same reports from the CLI: python -m repro.obs audit "
+              f"A.jsonl --job {jid}  /  python -m repro.obs contention "
+              "A.jsonl)")
+    finally:
+        os.unlink(audit)
 
 
 if __name__ == "__main__":

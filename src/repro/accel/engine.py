@@ -38,6 +38,7 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+from ..obs import audit as _obsaudit
 from ..obs import metrics as _obsmetrics
 from ..obs import trace as _obstrace
 from .state import MatchState
@@ -307,6 +308,12 @@ class ArrayMatchEngine:
             if tr.enabled:
                 tr.instant("accel.stale_plan", cat="accel", sim_t=now,
                            age_s=now - self._last_replan_t)
+            aud = _obsaudit.AUDIT
+            if aud.enabled:
+                # flight recorder: grants served off this stale plan are
+                # flagged — stale serving is the documented waiver of the
+                # audit stream's cross-engine byte-identity
+                aud.stale_plan(now)
             return st
         was_dirty = bool(getattr(sched, "_plan_dirty", True))
         sched.prepare_match(now)

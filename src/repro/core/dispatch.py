@@ -78,6 +78,16 @@ class DispatchTable:
     def num_slots(self) -> int:
         return sum(len(s) for s in self._slots if s)
 
+    def snapshot(self) -> List[Optional[List[tuple]]]:
+        """Pristine per-atom ``(req, lo, hi)`` tuples, safe to hold across
+        the live table's in-place slot invalidation.  This is what the array
+        engine's full (uncapped) mirror export and the audit recorder's
+        grant classification both scan — the compile-time slot indices, not
+        the engine-dependent mutated ones."""
+        return [s if s is None else
+                [(slot[0], slot[1], slot[2]) for slot in s]
+                for s in self._slots]
+
 
 def compile_plan(plan: SchedulePlan, intern, num_atoms: int,
                  tier_decisions: Dict[int, object]) -> DispatchTable:

@@ -46,6 +46,10 @@ class SchedulePlan:
     atom_priority: Dict[AtomKey, List[JobGroup]] = field(default_factory=dict)
     # group.requirement.name -> ordered pending jobs (head = currently served)
     job_order: Dict[str, List[Job]] = field(default_factory=dict)
+    # group.requirement.name -> the demand keys that produced job_order
+    # (parallel lists; the audit recorder exports them so a snapshot shows
+    # *why* the ordering came out the way it did)
+    job_keys: Dict[str, List[float]] = field(default_factory=dict)
 
     def owner(self, atom: AtomKey) -> Optional[JobGroup]:
         order = self.atom_priority.get(atom)
@@ -70,8 +74,12 @@ def venn_schedule(
 
     # ---- intra-group order (Alg. 1 lines 2-3) ------------------------------
     for g in active:
-        order = sorted(g.pending_jobs(), key=lambda j: (demand_key(j), j.job_id))
-        plan.job_order[g.requirement.name] = order
+        # sort decorated tuples (job_id is unique, so the Job itself is never
+        # compared) — identical order to key=(demand_key, job_id), but the
+        # keys survive for the plan's audit surface
+        keyed = sorted((demand_key(j), j.job_id, j) for j in g.pending_jobs())
+        plan.job_order[g.requirement.name] = [j for _, _, j in keyed]
+        plan.job_keys[g.requirement.name] = [k for k, _, _ in keyed]
 
     if not active:
         return plan

@@ -25,6 +25,7 @@ from typing import Dict, FrozenSet, List, Optional
 
 import numpy as np
 
+from ..obs import audit as _obsaudit
 from ..obs import metrics as _obsmetrics
 from ..obs import trace as _obstrace
 from .baselines import BaseScheduler
@@ -208,9 +209,7 @@ class VennScheduler(BaseScheduler):
         O(atoms x pending jobs).  The engine detects prefix exhaustion and
         re-exports wider."""
         if limit is None:
-            return [s if s is None else
-                    [(slot[0], slot[1], slot[2]) for slot in s]
-                    for s in self.dispatch._slots]
+            return self.dispatch.snapshot()
         return [s if s is None else
                 [(slot[0], slot[1], slot[2]) for slot in s[:limit]]
                 for s in self.dispatch._slots]
@@ -304,6 +303,14 @@ class VennScheduler(BaseScheduler):
         self._live[:] = self.dispatch.live_list()
         if sub is not None:
             tr.end(sub, num_atoms=self.index.num_atoms)
+        aud = _obsaudit.AUDIT
+        if aud.enabled:
+            # flight recorder: snapshot the IRS decision (intersection
+            # structure, orderings + demand keys, per-atom pressure) and
+            # refresh the pristine dispatch copy grant rows audit against.
+            # Replans are engine-invariant events, so this is the anchor
+            # that keeps audit streams byte-identical across drain engines.
+            aud.replan(now, self)
         if tok is not None:
             tr.end(tok, jobs=num_jobs, groups=len(active_groups))
         if reg.enabled:
@@ -366,6 +373,8 @@ class VennScheduler(BaseScheduler):
             order = sorted(g.pending_jobs(),
                            key=lambda j: (j.current.submit_time, j.job_id))  # type: ignore[union-attr]
             plan.job_order[g.requirement.name] = order
+            plan.job_keys[g.requirement.name] = [
+                j.current.submit_time for j in order]  # type: ignore[union-attr]
         for a in atoms:
             elig = [g for g in groups if a in g.eligible_atoms]
             elig.sort(key=lambda g: min((j.current.submit_time for j in g.pending_jobs()

@@ -30,7 +30,8 @@ import math
 from typing import Dict, List, Optional
 
 __all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
-           "NULL_REGISTRY", "NullRegistry", "REGISTRY", "read_jsonl"]
+           "NULL_REGISTRY", "NullRegistry", "REGISTRY", "merge_records",
+           "read_jsonl"]
 
 
 class Counter:
@@ -148,10 +149,18 @@ class Histogram:
         return self.total / self.count if self.count else float("nan")
 
     def merge(self, other: "Histogram") -> None:
-        if (other.lo, other.hi, other.bpd) != (self.lo, self.hi, self.bpd):
+        """Add ``other``'s counts into this histogram.
+
+        Raises :class:`ValueError` (never silently misbins) when the bucket
+        layouts differ — (lo, hi, buckets_per_decade) mismatch, or a bucket
+        count array of the wrong length (e.g. a corrupted snapshot)."""
+        if (other.lo, other.hi, other.bpd) != (self.lo, self.hi, self.bpd) \
+                or len(other.counts) != len(self.counts):
             raise ValueError(
-                f"cannot merge histograms with different layouts: "
-                f"{(self.lo, self.hi, self.bpd)} vs {(other.lo, other.hi, other.bpd)}")
+                f"cannot merge histogram {other.name!r} into {self.name!r}: "
+                f"bucket layouts differ — (lo, hi, buckets_per_decade, "
+                f"n_buckets) {(self.lo, self.hi, self.bpd, len(self.counts))}"
+                f" vs {(other.lo, other.hi, other.bpd, len(other.counts))}")
         for i, c in enumerate(other.counts):
             self.counts[i] += c
         self.count += other.count
@@ -261,6 +270,49 @@ class MetricsRegistry:
             for rec in (extra or ()):
                 fh.write(json.dumps(rec) + "\n")
         return path
+
+
+def merge_records(streams: List[List[dict]]) -> List[dict]:
+    """Merge several metrics-JSONL record lists into one snapshot list.
+
+    Counters with the same name sum; gauges take the last value seen (a
+    gauge is a point-in-time reading — summing would be meaningless);
+    histograms merge bucket-wise via :meth:`Histogram.merge`, which raises
+    on layout mismatch.  Non-metric records (timelines, audit rows) are
+    skipped and counted in the trailing ``kind="merge_info"`` record.
+    """
+    counters: Dict[str, float] = {}
+    gauges: Dict[str, float] = {}
+    hists: Dict[str, Histogram] = {}
+    skipped = 0
+    inputs = 0
+    for recs in streams:
+        inputs += 1
+        for rec in recs:
+            kind = rec.get("kind")
+            if kind == "counter":
+                counters[rec["name"]] = counters.get(rec["name"], 0.0) \
+                    + rec["value"]
+            elif kind == "gauge":
+                gauges[rec["name"]] = rec["value"]
+            elif kind == "histogram":
+                h = Histogram.from_snapshot(rec)
+                if rec["name"] in hists:
+                    hists[rec["name"]].merge(h)
+                else:
+                    hists[rec["name"]] = h
+            else:
+                skipped += 1
+    out: List[dict] = []
+    for name in sorted(counters):
+        out.append({"kind": "counter", "name": name, "value": counters[name]})
+    for name in sorted(gauges):
+        out.append({"kind": "gauge", "name": name, "value": gauges[name]})
+    for name in sorted(hists):
+        out.append(hists[name].snapshot())
+    out.append({"kind": "merge_info", "inputs": inputs,
+                "merged": len(out), "skipped_records": skipped})
+    return out
 
 
 def read_jsonl(path: str) -> List[dict]:

@@ -59,6 +59,16 @@ def build_parser() -> argparse.ArgumentParser:
     run.add_argument("--metrics-out", default=None, metavar="PATH",
                      help="write a metrics JSONL (histograms, counters, "
                           "per-job JCT-decomposition timeline records)")
+    run.add_argument("--audit-out", default=None, metavar="PATH",
+                     help="write the scheduler flight-recorder JSONL "
+                          "(replan snapshots, sampled grant audit, "
+                          "queue-position history; render with "
+                          "`python -m repro.obs contention|audit PATH`)")
+    run.add_argument("--grant-sample", type=int, default=None,
+                     metavar="N",
+                     help="audit every Nth round-opening grant (default 1 "
+                          "= one grant per round — only meaningful with "
+                          "--audit-out)")
 
     rep = sub.add_parser("replay", help="run a scenario's jobs over a "
                                         "recorded device trace")
@@ -100,12 +110,15 @@ def main(argv: Optional[List[str]] = None) -> int:
             record = per_scenario(args.record, name)
             trace_out = per_scenario(args.trace_out, name)
             metrics_out = per_scenario(args.metrics_out, name)
+            audit_out = per_scenario(args.audit_out, name)
             try:
                 results = run_scenario(spec, scheds=args.sched,
                                        seeds=args.seeds, fast=args.fast,
                                        record=record, engine=args.engine,
                                        trace_out=trace_out,
-                                       metrics_out=metrics_out)
+                                       metrics_out=metrics_out,
+                                       audit_out=audit_out,
+                                       grant_sample=args.grant_sample)
             except ValueError as e:
                 print(f"error: {e}", file=sys.stderr)
                 return 2
@@ -117,6 +130,9 @@ def main(argv: Optional[List[str]] = None) -> int:
                       f"`python -m repro.obs summarize {trace_out}`)")
             if metrics_out is not None:
                 print(f"(metrics written to {metrics_out})")
+            if audit_out is not None:
+                print(f"(scheduler audit written to {audit_out} — "
+                      f"`python -m repro.obs contention {audit_out}`)")
             print(comparison_table(results))
         return 0
     if args.cmd == "replay":

@@ -113,7 +113,9 @@ def run_scenario(spec_or_name, scheds: Sequence[str] = DEFAULT_SCHEDS,
                  replay: Optional[str] = None,
                  engine: Optional[str] = None,
                  trace_out: Optional[str] = None,
-                 metrics_out: Optional[str] = None) -> List[RunResult]:
+                 metrics_out: Optional[str] = None,
+                 audit_out: Optional[str] = None,
+                 grant_sample: Optional[int] = None) -> List[RunResult]:
     """Run a scenario across schedulers × seeds.
 
     With ``record``, the first scheduler's run is recorded.  The device
@@ -127,8 +129,14 @@ def run_scenario(spec_or_name, scheds: Sequence[str] = DEFAULT_SCHEDS,
     sweep: ``trace_out`` writes a Perfetto-loadable Chrome trace-event JSON
     (one ``run:<scenario>:<sched>:s<seed>`` span bracketing each run);
     ``metrics_out`` writes a metrics JSONL (histograms/counters plus
-    ``kind="timeline"`` per-job JCT-decomposition records).  Observability
-    never changes simulation outcomes — metrics stay bit-identical."""
+    ``kind="timeline"`` per-job JCT-decomposition records).
+    ``audit_out`` writes the scheduler flight-recorder JSONL (replan
+    snapshots, sampled grant audit, queue-position history; render with
+    ``python -m repro.obs contention|audit``) — the stream carries no
+    engine- or wall-clock-dependent fields, so it is byte-identical across
+    drain engines (``replan_budget_s`` stale serving excepted).
+    Observability never changes simulation outcomes — metrics stay
+    bit-identical."""
     spec = get_scenario(spec_or_name) if isinstance(spec_or_name, str) \
         else spec_or_name
     if record is not None and len(seeds) > 1:
@@ -137,18 +145,25 @@ def run_scenario(spec_or_name, scheds: Sequence[str] = DEFAULT_SCHEDS,
                          "at a time")
     if fast:
         spec = fast_scaled(spec)
-    obs_on = trace_out is not None or metrics_out is not None
+    obs_on = (trace_out is not None or metrics_out is not None
+              or audit_out is not None)
+    audit_kw = {} if grant_sample is None else {"grant_sample": grant_sample}
     ctx = obs.session(tracing=trace_out is not None,
-                      metrics=metrics_out is not None) if obs_on \
+                      metrics=metrics_out is not None,
+                      audit=audit_out is not None, **audit_kw) if obs_on \
         else nullcontext((NULL_TRACER, NULL_REGISTRY))
     results: List[RunResult] = []
     tl_records: List[dict] = []
     with ctx as (tr, reg):
+        aud = obs.get_audit()
         first = True
         for sched_name in scheds:
             for seed in seeds:
                 tok = tr.begin(f"run:{spec.name}:{sched_name}:s{seed}",
                                cat="run") if tr.enabled else None
+                if aud.enabled:
+                    aud.begin_run(scenario=spec.name, scheduler=sched_name,
+                                  seed=seed)
                 r = run_one(
                     spec, sched_name, seed,
                     record=record if first else None, replay=replay,
@@ -166,6 +181,8 @@ def run_scenario(spec_or_name, scheds: Sequence[str] = DEFAULT_SCHEDS,
             tr.write(trace_out)
         if metrics_out is not None:
             reg.write_jsonl(metrics_out, mode="w", extra=tl_records)
+        if audit_out is not None:
+            aud.write_jsonl(audit_out, mode="w")
     return results
 
 

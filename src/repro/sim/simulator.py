@@ -57,6 +57,7 @@ import numpy as np
 
 from ..core.baselines import BaseScheduler
 from ..core.types import Device, Job, JobRequest, JobStatus
+from ..obs import audit as _obsaudit
 from ..obs import metrics as _obsmetrics
 from ..obs import trace as _obstrace
 from .devices import (ChunkStream, DeviceChunk, DeviceGenerator,
@@ -512,6 +513,21 @@ class Simulator:
         materialize the ``Device``, arm its response, handle request fill.
         The single place grant side effects happen — shared by both drain
         engines.  Returns True iff the request just filled."""
+        if not req.granted:
+            # flight recorder: grant sequences are bit-identical across
+            # engines, so this (and not the drain loop) is where the grant
+            # audit stream hangs.  Only a round's *opening* grant is audit-
+            # eligible — the one cheap ``req.granted`` test above keeps the
+            # per-grant cost below even an AUDIT-enabled check, and audit
+            # work scales with rounds, not grants.  The hook runs before
+            # the ``granted`` increment so the recorder's slot scan
+            # classifies the pre-grant fill state.
+            aud = _obsaudit.AUDIT
+            if aud.enabled:
+                r = aud.rounds_seen
+                aud.rounds_seen = r + 1
+                if not r % aud.grant_sample:
+                    aud.grant(r, req, self._aids[i], dev_t, speed)
         self.now = dev_t
         dev = Device(caps={"cpu": self._cpu[i], "mem": self._mem[i]},
                      speed=speed, checkin_time=dev_t, atom_id=self._aids[i])

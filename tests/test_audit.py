@@ -1,0 +1,345 @@
+"""Scheduler flight-recorder tests — the audit half of the obs contract:
+
+* **engine-invariant**: the exported audit JSONL is byte-identical across
+  the python and array drain engines, on plain AND faulted scenarios;
+* **observe, never perturb**: audit-enabled runs leave ``SimMetrics``
+  bit-identical to disabled runs on both engines;
+* record-stream shape: replan snapshots carry the IRS structure (bipartite
+  edges, demand keys, per-atom pressure), grant rows stay flat all-scalar
+  dicts at round-opening granularity, queue positions are delta-encoded;
+* CLI verbs (``contention``/``audit``/``merge``) render the artifacts;
+* ``benchmarks.regress`` gate math: caps, tolerance bands, host scoping.
+"""
+import json
+import os
+import sys
+from dataclasses import replace
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro import obs
+from repro.obs import audit as obsaudit
+from repro.obs.__main__ import main as obs_main
+from repro.obs.audit import AuditRecorder, read_audit
+from repro.scenarios import fast_scaled, get_scenario, run_scenario
+from repro.scenarios.runner import run_one
+
+from benchmarks import regress
+
+
+def _tiny(spec):
+    spec = fast_scaled(spec)
+    return replace(
+        spec,
+        jobs=replace(spec.jobs, num_jobs=5),
+        sim=replace(spec.sim, max_time=1.5 * 24 * 3600.0),
+    )
+
+
+@pytest.fixture(autouse=True)
+def _obs_disabled():
+    """Every test starts and ends with the null singletons installed."""
+    obs.disable()
+    yield
+    obs.disable()
+
+
+# ------------------------------------------------- engine-invariant stream
+
+# one plain scenario + one faulted one (blackout_storm drives the injector
+# and the revocation path, so replans fire on fault instants too)
+@pytest.mark.parametrize("scenario", ["baseline_even", "blackout_storm"])
+def test_audit_stream_byte_identical_across_engines(scenario, tmp_path):
+    spec = _tiny(get_scenario(scenario))
+    paths = {}
+    for engine in ("python", "array"):
+        p = tmp_path / f"{engine}.jsonl"
+        run_scenario(spec, scheds=["venn"], seeds=[1], engine=engine,
+                     audit_out=str(p))
+        paths[engine] = p
+    py, ar = paths["python"].read_bytes(), paths["array"].read_bytes()
+    assert py == ar, "audit stream diverged between drain engines"
+    assert len(read_audit(str(paths["python"]))) > 1
+
+
+def test_audit_grant_sampling_is_deterministic(tmp_path):
+    """grant_sample strides the round-opening grants identically on both
+    engines (the counter lives in the recorder, not the engine)."""
+    spec = _tiny(get_scenario("baseline_even"))
+    out = {}
+    for engine in ("python", "array"):
+        p = tmp_path / f"s3_{engine}.jsonl"
+        run_scenario(spec, scheds=["venn"], seeds=[1], engine=engine,
+                     audit_out=str(p), grant_sample=3)
+        out[engine] = p.read_bytes()
+    assert out["python"] == out["array"]
+    recs = read_audit(str(tmp_path / "s3_python.jsonl"))
+    summ = recs[-1]
+    assert summ["kind"] == "audit_summary"
+    grants = [r for r in recs if r["kind"] == "grant"]
+    assert summ["grant_sample"] == 3
+    # every 3rd eligible (round-opening) grant: stream size is ~1/3 of the
+    # eligible count, never more
+    assert 0 < len(grants) <= summ["rounds_seen"] // 3 + 1
+
+
+# ------------------------------------------------ observe, never perturb
+
+@pytest.mark.parametrize("engine", ["python", "array"])
+def test_audit_run_metrics_bit_identical(engine):
+    spec = _tiny(get_scenario("baseline_even"))
+    plain = run_one(spec, "venn", seed=1, engine=engine).metrics
+    with obs.session(tracing=False, metrics=False, audit=True):
+        audited = run_one(spec, "venn", seed=1, engine=engine).metrics
+        n = len(obs.get_audit().records)
+    assert n > 0
+    assert audited.summary() == plain.summary()
+    assert audited.jcts == plain.jcts
+    assert audited.rounds == plain.rounds
+
+
+def test_null_audit_is_default_and_inert():
+    aud = obs.get_audit()
+    assert aud is obsaudit.NULL_AUDIT
+    assert not aud.enabled
+    aud.begin_run(scenario="x")
+    aud.replan(0.0, None)
+    aud.stale_plan(0.0)
+    aud.grant(0, None, 0, 0.0, 1.0)
+    assert aud.records == () and aud.dropped == 0
+
+
+# ------------------------------------------------------ record-stream shape
+
+def _audited_records():
+    spec = _tiny(get_scenario("baseline_even"))
+    with obs.session(tracing=False, metrics=False, audit=True):
+        run_one(spec, "venn", seed=1, engine="python")
+        return obs.get_audit().records
+
+
+def test_replan_snapshot_schema():
+    recs = _audited_records()
+    replans = [r for r in recs if r["kind"] == "replan"]
+    assert replans, "no replan snapshots recorded"
+    for r in replans:
+        assert set(r) >= {"seq", "t", "jobs", "groups", "atoms",
+                          "dead_atoms", "uncovered_atoms", "slots"}
+        for g in r["groups"]:
+            # bipartite edges: the group's job list x its eligible atom ids,
+            # with the fairness keys that ordered the jobs
+            assert set(g) >= {"group", "supply", "queued_demand", "jobs",
+                              "keys", "atoms", "alloc"}
+            assert len(g["keys"]) == len(g["jobs"])
+            assert g["atoms"] == sorted(g["atoms"])
+        for a in r["atoms"]:
+            assert set(a) >= {"id", "reqs", "rate", "demand", "pressure",
+                              "order"}
+            if a["rate"] > 0.0:
+                assert a["pressure"] == pytest.approx(
+                    a["demand"] / a["rate"])
+    # seq is contiguous within the run
+    assert [r["seq"] for r in replans] == list(range(len(replans)))
+
+
+def test_grant_rows_flat_and_round_opening():
+    recs = _audited_records()
+    grants = [r for r in recs if r["kind"] == "grant"]
+    assert grants, "no grant rows recorded"
+    seen = set()
+    for g in grants:
+        assert set(g) >= {"seq", "t", "job", "round", "atom", "speed",
+                          "replan"}
+        # flat all-scalar rows (the GC-untracking invariant): no containers
+        assert all(not isinstance(v, (list, dict)) for v in g.values())
+        if "slot" in g and g["slot"] >= 0:
+            assert g.get("skipped_filled", 0) >= 0
+        # round-opening only: one audited grant per request *attempt* — a
+        # (job, round) pair can recur only when a deadline abort retried
+        # the round, and then at a strictly later time
+        key = (g["job"], g["round"], g["t"])
+        assert key not in seen, "more than one grant audited per attempt"
+        seen.add(key)
+    # grant_sample=1: the eligible-grant sequence numbers are contiguous
+    assert [g["seq"] for g in grants] == list(range(len(grants)))
+
+
+def test_queue_positions_delta_encoded():
+    recs = _audited_records()
+    qpos = [r for r in recs if r["kind"] == "queue_pos"]
+    assert qpos, "no queue-position rows recorded"
+    last = {}
+    for q in qpos:
+        cur = (q["group"], q["pos"], tuple(q["ahead"]))
+        assert last.get(q["job"]) != cur, \
+            "duplicate queue_pos row — delta encoding broken"
+        last[q["job"]] = cur
+        assert len(q["ahead"]) == q["pos"]
+
+
+def test_audit_summary_counts_match_stream():
+    spec = _tiny(get_scenario("baseline_even"))
+    with obs.session(tracing=False, metrics=False, audit=True):
+        run_one(spec, "venn", seed=1, engine="python")
+        aud = obs.get_audit()
+        summ = aud.summary()
+        recs = aud.records
+    assert summ["kind"] == "audit_summary"
+    assert summ["records"] == len(recs)
+    by_kind = {}
+    for r in recs:
+        by_kind[r["kind"]] = by_kind.get(r["kind"], 0) + 1
+    assert summ["by_kind"] == by_kind
+
+
+def test_mid_run_export_then_continue(tmp_path):
+    """Deferred snapshot expansion is idempotent: exporting mid-stream and
+    again at the end yields the same trailing records."""
+    spec = _tiny(get_scenario("baseline_even"))
+    with obs.session(tracing=False, metrics=False, audit=True):
+        run_one(spec, "venn", seed=1, engine="python")
+        aud = obs.get_audit()
+        mid = aud.records            # forces expansion
+        run_one(spec, "venn", seed=2, engine="python")
+        full = aud.records
+    assert full[:len(mid)] == mid
+    assert len(full) > len(mid)
+
+
+def test_recorder_max_records_drops_and_counts():
+    rec = AuditRecorder(max_records=2)
+    rec.begin_run(scenario="s")
+    rec._add({"kind": "grant", "seq": 0})
+    rec._add({"kind": "grant", "seq": 1})
+    assert rec.dropped == 1
+    assert len(rec.records) == 2
+
+
+# --------------------------------------------------------------- CLI verbs
+
+def _write_audit(tmp_path):
+    spec = _tiny(get_scenario("baseline_even"))
+    p = tmp_path / "audit.jsonl"
+    run_scenario(spec, scheds=["venn"], seeds=[1], engine="python",
+                 audit_out=str(p))
+    return p
+
+
+def test_cli_contention_renders(tmp_path, capsys):
+    p = _write_audit(tmp_path)
+    assert obs_main(["contention", str(p)]) == 0
+    out = capsys.readouterr().out
+    assert "pressure" in out.lower()
+
+
+def test_cli_audit_stats_and_explain_job(tmp_path, capsys):
+    p = _write_audit(tmp_path)
+    assert obs_main(["audit", str(p)]) == 0
+    stats = capsys.readouterr().out
+    assert "replan" in stats and "grant" in stats
+    jid = next(r["job"] for r in read_audit(str(p))
+               if r["kind"] == "queue_pos")
+    assert obs_main(["audit", str(p), "--job", str(jid)]) == 0
+    assert f"job {jid}" in capsys.readouterr().out
+
+
+def test_cli_merge_verb(tmp_path, capsys):
+    spec = _tiny(get_scenario("baseline_even"))
+    a = tmp_path / "a.jsonl"
+    b = tmp_path / "b.jsonl"
+    for seed, path in ((1, a), (2, b)):
+        run_scenario(spec, scheds=["venn"], seeds=[seed], engine="python",
+                     metrics_out=str(path))
+    merged = tmp_path / "m.jsonl"
+    assert obs_main(["merge", str(a), str(b), "--out", str(merged)]) == 0
+    out = capsys.readouterr().out
+    assert "merged 2 metrics files" in out
+    assert merged.exists()
+
+
+def test_cli_merge_layout_mismatch_is_an_error(tmp_path, capsys):
+    a = tmp_path / "a.jsonl"
+    b = tmp_path / "b.jsonl"
+    ha = obs.Histogram("lat", lo=1e-6, hi=10.0)
+    hb = obs.Histogram("lat", lo=1e-5, hi=10.0)
+    ha.record(0.1)
+    hb.record(0.2)
+    a.write_text(json.dumps(ha.snapshot()) + "\n")
+    b.write_text(json.dumps(hb.snapshot()) + "\n")
+    assert obs_main(["merge", str(a), str(b)]) == 1
+    assert "merge error" in capsys.readouterr().err
+
+
+# ------------------------------------------------------- regress.py gate
+
+def _hist_row(workload, metrics, ts, host="testhost", fast=True,
+              commit="abc1234"):
+    return {"commit": commit, "ts": ts, "host": host, "fast": fast,
+            "workload": workload, "metrics": metrics}
+
+
+def _write_history(tmp_path, rows):
+    p = tmp_path / "hist.jsonl"
+    p.write_text("".join(json.dumps(r) + "\n" for r in rows))
+    return p
+
+
+def test_regress_clean_history_passes(tmp_path, capsys):
+    p = _write_history(tmp_path, [
+        _hist_row("w", {"wall_s": 2.0}, ts=1.0),
+        _hist_row("w", {"wall_s": 2.1}, ts=2.0),
+    ])
+    assert regress.check(p) == 0
+    assert "within tolerance" in capsys.readouterr().out
+
+
+def test_regress_catches_band_regression(tmp_path, capsys):
+    p = _write_history(tmp_path, [
+        _hist_row("w", {"wall_s": 2.0}, ts=1.0),
+        _hist_row("w", {"wall_s": 4.0}, ts=2.0),   # 2x best prior > 50% band
+    ])
+    assert regress.check(p) == 1
+    assert "regressed beyond" in capsys.readouterr().out
+
+
+def test_regress_enforces_absolute_cap_without_history(tmp_path, capsys):
+    p = _write_history(tmp_path, [
+        _hist_row("w", {"audit_overhead_frac": 0.30}, ts=1.0),
+    ])
+    assert regress.check(p) == 1
+    assert "breaches absolute cap" in capsys.readouterr().out
+
+
+def test_regress_host_scoped_metric_skips_other_hosts(tmp_path, capsys):
+    # a 10x faster prior row from a *different* machine must not fail us
+    p = _write_history(tmp_path, [
+        _hist_row("w", {"wall_s": 0.2}, ts=1.0, host="fastbox"),
+        _hist_row("w", {"wall_s": 2.0}, ts=2.0, host="slowbox"),
+    ])
+    assert regress.check(p) == 0
+    assert "no comparable history" in capsys.readouterr().out
+
+
+def test_regress_fast_and_full_are_separate_series(tmp_path):
+    p = _write_history(tmp_path, [
+        _hist_row("w", {"wall_s": 0.2}, ts=1.0, fast=True),
+        _hist_row("w", {"wall_s": 2.0}, ts=2.0, fast=False),
+    ])
+    assert regress.check(p) == 0
+
+
+def test_regress_missing_history_is_a_pass(tmp_path, capsys):
+    assert regress.main(["check", "--history",
+                         str(tmp_path / "nope.jsonl")]) == 0
+    assert "nothing to check" in capsys.readouterr().out
+
+
+def test_regress_direction_higher_is_better(tmp_path, capsys):
+    p = _write_history(tmp_path, [
+        _hist_row("w", {"seen_per_sec": 1000.0}, ts=1.0),
+        _hist_row("w", {"seen_per_sec": 100.0}, ts=2.0),  # 10x throughput drop
+    ])
+    assert regress.check(p) == 1
+    assert "regressed beyond" in capsys.readouterr().out

@@ -58,6 +58,9 @@ TRACKED: Dict[str, Tuple[str, str]] = {
     "seen_per_sec": ("higher", "host"),
     "checkin_loop_s": ("lower", "host"),
     "loop_speedup": ("higher", "any"),
+    "replan_wall_s": ("lower", "host"),
+    "replans_per_sec": ("higher", "host"),
+    "replan_speedup": ("higher", "any"),
     "audit_overhead_frac": ("lower", "any"),
 }
 

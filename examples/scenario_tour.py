@@ -40,6 +40,42 @@ def main() -> None:
     finally:
         os.unlink(trace)
 
+    # --- before/after: the incremental replan engine ----------------------
+    # The same scenario under both replan backends: "scalar" pins the
+    # reference venn_schedule + compile_plan pair, "array" is the
+    # incremental ReplanEngine (dirty-set deltas over maintained key
+    # arrays).  Metrics are bit-identical by contract; the venn.replan.*
+    # sub-spans show where the time went.  The same table comes from any
+    # run via --trace-out T.json + `python -m repro.obs summarize T.json`
+    # (self-time sorted, so venn.replan doesn't double-count its phases).
+    from repro import obs
+    from repro.obs.summarize import span_stats
+
+    spec = fast_scaled(get_scenario("churn_storm"))
+    stats, mets = {}, {}
+    for mode in ("scalar", "array"):
+        os.environ["REPRO_REPLAN"] = mode
+        try:
+            with obs.session(tracing=True, categories={"sched"}) as (tr, _):
+                mets[mode] = run_one(spec, "venn", seed=0,
+                                     engine="array").metrics
+                stats[mode] = span_stats(tr.events)
+        finally:
+            del os.environ["REPRO_REPLAN"]
+    print("\n== replan cost, scalar reference vs incremental engine ==")
+    print(f"{'span':<24} {'scalar':>12} {'array':>12}")
+    names = ["venn.replan", "venn.replan.supply", "venn.replan.irs",
+             "venn.replan.tiers", "venn.replan.compile"]
+    for name in names:
+        cols = []
+        for mode in ("scalar", "array"):
+            st = stats[mode].get(name)
+            cols.append(f"{st['total_us'] / 1e3:.1f}ms" if st else "-")
+        print(f"{name:<24} {cols[0]:>12} {cols[1]:>12}")
+    print("metrics bit-identical across backends:",
+          mets["scalar"].jcts == mets["array"].jcts
+          and mets["scalar"].rounds == mets["array"].rounds)
+
     # --- explain a scheduling decision from the flight recorder -----------
     # The audit stream answers "why did job J wait?" after the fact: its
     # queue-position history names the exact contending jobs ahead of it

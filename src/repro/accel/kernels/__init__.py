@@ -1,5 +1,7 @@
 """Pallas kernels for the array-native scheduler engine."""
-from .ref import masked_first_fit_ref
+from .ref import masked_first_fit_ref, segmented_rank_ref
+from .replan_order import segmented_order, segmented_rank
 from .schedule_match import masked_first_fit
 
-__all__ = ["masked_first_fit", "masked_first_fit_ref"]
+__all__ = ["masked_first_fit", "masked_first_fit_ref",
+           "segmented_order", "segmented_rank", "segmented_rank_ref"]

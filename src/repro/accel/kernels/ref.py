@@ -12,6 +12,19 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
+def segmented_rank_ref(seg_ids: jnp.ndarray, keys: jnp.ndarray,
+                       ties: jnp.ndarray) -> jnp.ndarray:
+    """``rank[i] = |{j : seg[j] == seg[i] and (key[j], tie[j]) < (key[i],
+    tie[i])}|`` — each job's position within its segment under ``(key, tie)``
+    ascending (the replan's intra-group order; ties are unique job ids, so
+    ranks are a permutation of each segment).  Contract for
+    :mod:`repro.accel.kernels.replan_order`."""
+    same = seg_ids[None, :] == seg_ids[:, None]
+    less = (keys[None, :] < keys[:, None]) | (
+        (keys[None, :] == keys[:, None]) & (ties[None, :] < ties[:, None]))
+    return jnp.sum(same & less, axis=1).astype(jnp.int32)
+
+
 def masked_first_fit_ref(elig: jnp.ndarray, fillcand: jnp.ndarray,
                          pos: jnp.ndarray) -> jnp.ndarray:
     """``kidx[i] = min{k : elig[i, k] and fillcand[i, k] >= pos[i]}``, or

@@ -223,12 +223,13 @@ class SupplyRings:
 
     @classmethod
     def from_estimator(cls, est: SupplyEstimator) -> "SupplyRings":
-        n = len(est._totals)
-        counts = (np.stack(est._counts) if n
-                  else np.zeros((0, est._nb), dtype=np.int64))
-        return cls(counts,
-                   np.asarray(est._totals, dtype=np.int64),
-                   np.asarray(est._next_evict, dtype=np.int64),
+        # the estimator stores one (capacity, nb) matrix with rows [0, _n)
+        # live; copy the live slice so the view stays pristine while the
+        # estimator keeps evicting/recording in place
+        n = est._n
+        return cls(est._counts[:n].copy(),
+                   est._totals[:n].copy(),
+                   est._next_evict[:n].copy(),
                    est._nb, est.window, est.bucket, est.prior_rate,
                    est._t0, est._now)
 

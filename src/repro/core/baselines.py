@@ -82,6 +82,12 @@ class BaseScheduler:
                     response_time: float, ok: bool, now: float) -> None:
         """Response feedback — baselines ignore it (Venn profiles tiers)."""
 
+    def on_grant(self, request: JobRequest) -> None:
+        """One check-in was granted to ``request`` (``granted`` already
+        incremented).  Called by the simulator's single grant site for both
+        drain engines; the incremental replan engine uses it to keep its
+        demand-key mirror current.  Baselines track nothing per grant."""
+
     # ---- vectorized check-in fast path ------------------------------------
 
     @property

@@ -116,13 +116,22 @@ def compile_plan(plan: SchedulePlan, intern, num_atoms: int,
                     lo, hi = d.speed_lo, d.speed_hi
             lowered.append([req, lo, hi])
         slots_by_group[gname] = lowered
+    # Atoms sharing the same priority-group sequence share one merged list
+    # (memoized by the group-name tuple).  Sharing is exact: the only
+    # in-place mutation a merged list ever sees is filled-slot invalidation,
+    # and a filled slot can never match on any atom, so one atom's filter
+    # pass only removes entries every sharer's scan would have skipped.
+    merged_memo: Dict[tuple, List[list]] = {}
     for key, groups in plan.atom_priority.items():
         aid = intern(key)
         if aid >= len(slots_by_atom):
             slots_by_atom.extend([None] * (aid + 1 - len(slots_by_atom)))
-        merged: List[list] = []
-        for group in groups:
-            merged.extend(slots_by_group.get(group.requirement.name, ()))
+        names = tuple(g.requirement.name for g in groups)
+        merged = merged_memo.get(names)
+        if merged is None:
+            merged = merged_memo[names] = []
+            for group in groups:
+                merged.extend(slots_by_group.get(group.requirement.name, ()))
         slots_by_atom[aid] = merged
     # Atoms the plan does not mention stay None -> MISS.  Batch
     # classification interns atoms *before* the supply estimator has seen

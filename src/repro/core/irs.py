@@ -60,6 +60,103 @@ class SchedulePlan:
         return [order[0] for order in self.job_order.values() if order]
 
 
+def _atom_order(g: JobGroup):
+    """Canonical per-group atom iteration order.
+
+    The manager builds ``g.atom_rates`` in ascending interned-id order, which
+    makes every order-sensitive float accumulation below (allocation
+    insertion order, hence ``alloc_rate`` summation order) deterministic and
+    independent of frozenset hash order — the property the incremental
+    replan engine and cross-process audit byte-identity both rely on.  Falls
+    back to ``eligible_atoms`` for hand-built groups without rates."""
+    return g.atom_rates if g.atom_rates else g.eligible_atoms
+
+
+def intra_group_order(g: JobGroup, demand_key: DemandKeyFn):
+    """Alg. 1 lines 2-3 for one group: smallest-(fairness-adjusted-)demand
+    first.  Returns ``(jobs, keys)`` parallel lists."""
+    # sort decorated tuples (job_id is unique, so the Job itself is never
+    # compared) — identical order to key=(demand_key, job_id), but the
+    # keys survive for the plan's audit surface
+    keyed = sorted((demand_key(j), j.job_id, j) for j in g.pending_jobs())
+    return [j for _, _, j in keyed], [k for k, _, _ in keyed]
+
+
+def inter_group_allocate(active: Sequence[JobGroup],
+                         queue_len: QueueLenFn) -> None:
+    """Alg. 1 lines 4-17: initial scarcest-first atom claim + greedy
+    pressure-driven reallocation.  Mutates ``g.allocation`` in place.
+
+    Shared verbatim by the scalar :func:`venn_schedule` and the incremental
+    :class:`repro.accel.replan.ReplanEngine` (group counts are small; the
+    job-dimension work is what the engine vectorizes), so the two paths are
+    bit-identical here by construction."""
+    # ---- initial allocation: scarcest group claims first -------------------
+    # per-atom rate share: supply estimator stores rate per atom on the group
+    # (all groups see the same per-atom rate; g.supply = Σ rates over atoms).
+    claimed = set()
+    by_scarcity = sorted(active, key=lambda g: (g.supply, g.requirement.name))
+    for g in by_scarcity:
+        alloc = {}
+        for a in _atom_order(g):
+            if a not in claimed:
+                alloc[a] = g.atom_rate(a)
+                claimed.add(a)
+        g.allocation = alloc
+
+    # ---- greedy inter-group reallocation -----------------------------------
+    by_abundance = sorted(active, key=lambda g: (-g.supply, g.requirement.name))
+    for gj in by_abundance:
+        # |S'_j| may be 0 after initial allocation; ``_pressure`` treats a
+        # zero-rate group with pending jobs as infinite pressure, so it wins
+        # any intersected atoms from scarcer donors below.
+        # candidate donors: scarcer groups with intersecting eligible sets,
+        # visited from most abundant down ("take from relatively abundant
+        # groups first").
+        donors = [
+            gk for gk in active
+            if gk is not gj
+            and gk.supply < gj.supply
+            and not gk.eligible_atoms.isdisjoint(gj.eligible_atoms)
+        ]
+        donors.sort(key=lambda g: (-g.supply, g.requirement.name))
+        for gk in donors:
+            mj = queue_len(gj)
+            mk = queue_len(gk)
+            rj = _pressure(mj, gj.alloc_rate)
+            rk = _pressure(mk, gk.alloc_rate)
+            if rj > rk:
+                shared = [a for a in _atom_order(gj) if a in gk.allocation]
+                if not shared:
+                    continue
+                for a in shared:
+                    gj.allocation[a] = gj.allocation.get(a, 0.0) + gk.allocation.pop(a)
+            else:
+                # if G_j wants more it must first have out-pressured the more
+                # abundant donors; stop here (Alg. 1 line 17).
+                break
+
+
+def atom_priorities(active: Sequence[JobGroup]) -> Dict[AtomKey, List[JobGroup]]:
+    """Per-atom assignment priority lists over the active groups' eligible
+    union: owner first, then fallbacks scarcest-first so leftover devices
+    keep serving the most constrained queues.  Shared by both replan paths."""
+    universe: Dict[AtomKey, None] = {}
+    for g in active:
+        for a in _atom_order(g):
+            universe.setdefault(a)
+    out: Dict[AtomKey, List[JobGroup]] = {}
+    for a in universe:
+        owners = [g for g in active if a in g.allocation]
+        fallbacks = [
+            g for g in active
+            if a in g.eligible_atoms and a not in g.allocation
+        ]
+        fallbacks.sort(key=lambda g: (g.supply, g.requirement.name))
+        out[a] = owners + fallbacks
+    return out
+
+
 def venn_schedule(
     groups: Sequence[JobGroup],
     queue_len: QueueLenFn,
@@ -74,74 +171,15 @@ def venn_schedule(
 
     # ---- intra-group order (Alg. 1 lines 2-3) ------------------------------
     for g in active:
-        # sort decorated tuples (job_id is unique, so the Job itself is never
-        # compared) — identical order to key=(demand_key, job_id), but the
-        # keys survive for the plan's audit surface
-        keyed = sorted((demand_key(j), j.job_id, j) for j in g.pending_jobs())
-        plan.job_order[g.requirement.name] = [j for _, _, j in keyed]
-        plan.job_keys[g.requirement.name] = [k for k, _, _ in keyed]
+        jobs, keys = intra_group_order(g, demand_key)
+        plan.job_order[g.requirement.name] = jobs
+        plan.job_keys[g.requirement.name] = keys
 
     if not active:
         return plan
 
-    # ---- initial allocation (lines 4-7): scarcest group claims first ------
-    atom_rates: Dict[AtomKey, float] = {}
-    for g in active:
-        for a in g.eligible_atoms:
-            atom_rates.setdefault(a, 0.0)
-    # per-atom rate share: supply estimator stores rate per atom on the group
-    # (all groups see the same per-atom rate; g.supply = Σ rates over atoms).
-    unclaimed = set(atom_rates)
-    by_scarcity = sorted(active, key=lambda g: (g.supply, g.requirement.name))
-    for g in by_scarcity:
-        mine = unclaimed & set(g.eligible_atoms)
-        g.allocation = {a: g.atom_rate(a) for a in mine}  # type: ignore[attr-defined]
-        unclaimed -= mine
-
-    # ---- greedy inter-group reallocation (lines 8-17) ----------------------
-    by_abundance = sorted(active, key=lambda g: (-g.supply, g.requirement.name))
-    for gj in by_abundance:
-        # |S'_j| may be 0 after initial allocation; ``_pressure`` treats a
-        # zero-rate group with pending jobs as infinite pressure, so it wins
-        # any intersected atoms from scarcer donors below.
-        # candidate donors: scarcer groups with intersecting eligible sets,
-        # visited from most abundant down ("take from relatively abundant
-        # groups first").
-        donors = [
-            gk for gk in active
-            if gk is not gj
-            and gk.supply < gj.supply
-            and (set(gk.eligible_atoms) & set(gj.eligible_atoms))
-        ]
-        donors.sort(key=lambda g: (-g.supply, g.requirement.name))
-        for gk in donors:
-            mj = queue_len(gj)
-            mk = queue_len(gk)
-            rj = _pressure(mj, gj.alloc_rate)
-            rk = _pressure(mk, gk.alloc_rate)
-            if rj > rk:
-                shared = set(gj.eligible_atoms) & set(gk.allocation)
-                if not shared:
-                    continue
-                for a in shared:
-                    gj.allocation[a] = gj.allocation.get(a, 0.0) + gk.allocation.pop(a)
-            else:
-                # if G_j wants more it must first have out-pressured the more
-                # abundant donors; stop here (Alg. 1 line 17).
-                break
-
-    # ---- per-atom priority lists -------------------------------------------
-    for a in atom_rates:
-        owners = [g for g in active if a in g.allocation]
-        fallbacks = [
-            g for g in active
-            if a in g.eligible_atoms and a not in g.allocation
-        ]
-        # owner first; fallbacks scarcest-first so leftover devices keep
-        # serving the most constrained queues.
-        fallbacks.sort(key=lambda g: (g.supply, g.requirement.name))
-        plan.atom_priority[a] = owners + fallbacks
-
+    inter_group_allocate(active, queue_len)
+    plan.atom_priority = atom_priorities(active)
     return plan
 
 

@@ -19,6 +19,7 @@ estimator lazily, in batch, the next time the schedule is recomputed.
 from __future__ import annotations
 
 import math
+import os
 import random
 import time
 from typing import Dict, FrozenSet, List, Optional
@@ -45,8 +46,18 @@ class VennScheduler(BaseScheduler):
 
     def __init__(self, seed: int = 0, num_tiers: int = 4, epsilon: float = 0.0,
                  supply_window: float = 24 * 3600.0, enable_matching: bool = True,
-                 enable_irs: bool = True):
+                 enable_irs: bool = True, replan: Optional[str] = None):
         super().__init__(seed)
+        # replan backend: "auto"/"array" = incremental array engine
+        # (repro.accel.replan, bit-identical), "scalar" = reference
+        # venn_schedule + compile_plan.  Default resolves from REPRO_REPLAN
+        # so CLI runs can pin the scalar path for byte-identity comparisons.
+        if replan is None:
+            replan = os.environ.get("REPRO_REPLAN", "auto")
+        if replan not in ("auto", "array", "scalar"):
+            raise ValueError(f"unknown replan mode {replan!r}")
+        self.replan_mode = replan
+        self._replan = None                # lazy ReplanEngine
         # one shared atom-id space: classification ids feed the estimator
         # directly (no index->supply translation table)
         self.supply = SupplyEstimator(window=supply_window,
@@ -74,6 +85,7 @@ class VennScheduler(BaseScheduler):
         # pending chunk feed (struct-of-arrays), absorbed lazily at replans
         self._feed_times: Optional[np.ndarray] = None
         self._feed_ids: Optional[np.ndarray] = None
+        self._feed_babs: Optional[np.ndarray] = None
         self._feed_pos = 0
 
     # ------------------------------------------------------- crash snapshots
@@ -87,6 +99,10 @@ class VennScheduler(BaseScheduler):
         d["tier_decisions"] = [(req, dec) for req, dec in
                                ((r, self.tier_decisions.get(id(r)))
                                 for r in self.pending) if dec is not None]
+        # the incremental replan engine is a derived cache keyed by object
+        # identity; drop it and let the first post-restore replan rebuild
+        # from the authoritative group state (incremental ≡ full recompute)
+        d["_replan"] = None
         return d
 
     def __setstate__(self, d):
@@ -106,6 +122,8 @@ class VennScheduler(BaseScheduler):
             g.jobs.append(request.job)
         self.pending.append(request)
         self._plan_dirty = True
+        if self._replan is not None:
+            self._replan.on_request(request)
 
     def on_complete(self, request: JobRequest, now: float) -> None:
         if request in self.pending:
@@ -115,6 +133,15 @@ class VennScheduler(BaseScheduler):
         if g and request.job.remaining_rounds == 0 and request.job in g.jobs:
             g.jobs.remove(request.job)
         self._plan_dirty = True
+        if self._replan is not None:
+            self._replan.on_complete(request)
+
+    def on_grant(self, request: JobRequest) -> None:
+        """Keep the incremental replan engine's demand-key mirror current
+        (grants change ``remaining_demand`` — and a fill removes the job
+        from the pending set — without any other scheduler hook firing)."""
+        if self._replan is not None:
+            self._replan.on_grant(request)
 
     def on_response(self, request: JobRequest, device: Device,
                     response_time: float, ok: bool, now: float) -> None:
@@ -137,6 +164,10 @@ class VennScheduler(BaseScheduler):
         self._absorb_feed(math.inf)
         self._feed_times = times
         self._feed_ids = atom_ids
+        # bucket the whole chunk once, outside any replan span: each replan's
+        # absorb then slices precomputed indices instead of re-dividing its
+        # window of times (identical integer buckets, computed earlier)
+        self._feed_babs = (times // self.supply.bucket).astype(np.int64)
         self._feed_pos = 0
 
     def checkin(self, atom_id: int, cpu: float, mem: float, speed: float,
@@ -156,6 +187,13 @@ class VennScheduler(BaseScheduler):
             self._reschedule(now)
             req = self.dispatch.assign(atom_id, speed)
             return None if req is MISS else req
+        if not slots:
+            # compiled merged lists may be shared across atoms: another
+            # atom's filter pass can empty this list without marking *this*
+            # atom dead, so catch up here (an empty slot list always means
+            # "no candidate" — exactly what a recompile would record)
+            self._live[atom_id] = False
+            return None
         found = None
         dead = False
         for slot in slots:
@@ -223,10 +261,23 @@ class VennScheduler(BaseScheduler):
             return
         sl = slice(self._feed_pos, hi)
         # classification ids are supply ids (shared interner): feed directly
-        self.supply.record_batch(self._feed_ids[sl], self._feed_times[sl])
+        self.supply.record_batch(self._feed_ids[sl], self._feed_times[sl],
+                                 babs=self._feed_babs[sl])
         self._feed_pos = hi
 
     # ------------------------------------------------------------- Alg 1+2
+
+    def _engine(self):
+        """The incremental replan engine, or ``None`` when the scalar
+        reference path is pinned (``replan="scalar"``) or IRS is ablated
+        (the FIFO plan has no incremental form).  Lazily constructed so
+        scalar-pinned runs never import the accel package."""
+        if not self.enable_irs or self.replan_mode == "scalar":
+            return None
+        if self._replan is None:
+            from ..accel.replan import ReplanEngine
+            self._replan = ReplanEngine()
+        return self._replan
 
     def _reschedule(self, now: float) -> None:
         self.sched_invocations += 1
@@ -250,17 +301,31 @@ class VennScheduler(BaseScheduler):
         key_of = self.index.interner.key_of
         id_of = self.index.interner.id_of
         atoms = {key_of(aid) for aid in np.flatnonzero(seen).tolist()}
+        eng = self._engine()
+        if eng is not None:
+            eng.sync(self.groups.values())
+            active_groups = [g for g in self.groups.values()
+                             if eng.pending_count(g.requirement.name)]
+        else:
+            active_groups = [g for g in self.groups.values()
+                             if g.pending_jobs()]
         # make sure every group's requirement defines atoms even pre-traffic
-        active_groups = [g for g in self.groups.values() if g.pending_jobs()]
         for g in active_groups:
-            g.eligible_atoms = self.index.eligible_atoms(g.requirement, atoms)
-            g.atom_rates = {a: float(rates[id_of(a)]) for a in g.eligible_atoms}
+            elig = self.index.eligible_atoms(g.requirement, atoms)
+            g.eligible_atoms = elig
+            # canonical ascending-id atom order: makes the allocation dicts'
+            # insertion order — hence every float accumulation over them —
+            # deterministic and independent of frozenset hash order (the
+            # contract _atom_order/the replan engine rely on)
+            aids = sorted(id_of(a) for a in elig)
+            g.atom_rates = {key_of(aid): float(rates[aid]) for aid in aids}
             g.supply = sum(g.atom_rates.values())
             g.allocation = {}
         if sub is not None:
             tr.end(sub, atoms=len(atoms), groups=len(active_groups))
 
-        num_jobs = sum(len(g.pending_jobs()) for g in active_groups)
+        num_jobs = eng.total_pending() if eng is not None else \
+            sum(len(g.pending_jobs()) for g in active_groups)
         solo = lambda j: self._solo_jct(j)
         sub = tr.begin("venn.replan.irs", cat="sched") if tr.enabled else None
         if self.enable_irs:
@@ -274,15 +339,25 @@ class VennScheduler(BaseScheduler):
                     v = qcache[id(g)] = self.fairness.queue_len(g, num_jobs, solo)
                 return v
 
-            self.plan = venn_schedule(
-                active_groups,
-                queue_len=queue_len,
-                demand_key=lambda j: self.fairness.demand_key(j, num_jobs, solo),
-            )
+            if eng is not None:
+                # incremental array path: event-maintained demand keys when
+                # fairness is off; fairness keys drift with supply, so they
+                # are recomputed per replan through the same policy callable
+                dk = (lambda j: self.fairness.demand_key(j, num_jobs, solo)) \
+                    if self.fairness.enabled() else None
+                self.plan = eng.schedule(active_groups, queue_len,
+                                         demand_key=dk)
+            else:
+                self.plan = venn_schedule(
+                    active_groups,
+                    queue_len=queue_len,
+                    demand_key=lambda j: self.fairness.demand_key(j, num_jobs, solo),
+                )
         else:  # ablation "Venn w/o scheduling": FIFO order, matching only
             self.plan = self._fifo_plan(active_groups, atoms)
         if sub is not None:
-            tr.end(sub, jobs=num_jobs)
+            tr.end(sub, jobs=num_jobs, **(eng.last_stats if eng is not None
+                                          and self.enable_irs else {}))
 
         # cover every known atom so idle/ineligible check-ins never replan
         for a in atoms:
@@ -298,11 +373,20 @@ class VennScheduler(BaseScheduler):
 
         sub = tr.begin("venn.replan.compile", cat="sched") \
             if tr.enabled else None
-        self.dispatch = compile_plan(self.plan, self.index.intern,
-                                     self.index.num_atoms, self.tier_decisions)
+        if eng is not None:
+            self.dispatch = eng.compile(self.plan, self.index.intern,
+                                        self.index.num_atoms,
+                                        self.tier_decisions)
+        else:
+            self.dispatch = compile_plan(self.plan, self.index.intern,
+                                         self.index.num_atoms,
+                                         self.tier_decisions)
         self._live[:] = self.dispatch.live_list()
         if sub is not None:
-            tr.end(sub, num_atoms=self.index.num_atoms)
+            tr.end(sub, num_atoms=self.index.num_atoms,
+                   **({k: eng.last_stats[k] for k in
+                       ("lowered_reused", "merged_reused")
+                       if k in eng.last_stats} if eng is not None else {}))
         aud = _obsaudit.AUDIT
         if aud.enabled:
             # flight recorder: snapshot the IRS decision (intersection
@@ -317,6 +401,12 @@ class VennScheduler(BaseScheduler):
             reg.counter("venn.replans").inc()
             reg.histogram("venn.replan_wall_s", lo=1e-7, hi=1e2).record(
                 time.perf_counter() - t_replan)
+            if eng is not None:
+                # incremental-reuse telemetry: how much of this replan was
+                # served from caches vs recomputed (order/lowered/merged)
+                for k, v in eng.last_stats.items():
+                    if v:
+                        reg.counter("venn.replan." + k).inc(v)
 
     def _decide_tiers(self, now: float) -> None:
         kept: Dict[int, TierDecision] = {}

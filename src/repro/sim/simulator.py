@@ -532,6 +532,12 @@ class Simulator:
         dev = Device(caps={"cpu": self._cpu[i], "mem": self._mem[i]},
                      speed=speed, checkin_time=dev_t, atom_id=self._aids[i])
         req.granted += 1
+        # incremental-replan hook: grants are the one pending-set/demand-key
+        # mutation that flows through neither on_request nor on_complete
+        # (a fill drops the job from pending_jobs() before any completion
+        # hook fires).  Runs after the increment so the scheduler sees the
+        # post-grant remaining demand.  No-op for the baselines.
+        self.sched.on_grant(req)
         filled = req.granted >= req.demand
         if filled:
             self._open -= 1

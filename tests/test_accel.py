@@ -132,6 +132,41 @@ def test_masked_first_fit_kernel_matches_ref():
         assert np.array_equal(np.asarray(want), np.asarray(got)), (n, K)
 
 
+def test_segmented_rank_kernel_matches_ref():
+    import jax.numpy as jnp
+
+    from repro.accel.kernels import segmented_rank, segmented_rank_ref
+    rng = np.random.default_rng(1)
+    for n in (1, 2, 7, 64, 200, 513, 1024):
+        seg = np.sort(rng.integers(0, max(1, n // 9) + 1, n)).astype(np.int32)
+        keys = rng.uniform(0, 100, n).astype(np.float32)
+        if n > 4:                      # exercise the tie-break axis
+            keys[1] = keys[0]
+            keys[3] = keys[2]
+        ties = rng.permutation(n).astype(np.int32)
+        want = segmented_rank_ref(jnp.asarray(seg), jnp.asarray(keys),
+                                  jnp.asarray(ties))
+        got = segmented_rank(jnp.asarray(seg), jnp.asarray(keys),
+                             jnp.asarray(ties), interpret=True)
+        assert np.array_equal(np.asarray(want), np.asarray(got)), n
+
+
+def test_segmented_order_matches_lexsort():
+    """ranks -> permutation ≡ np.lexsort((job_id, key, group)): the same
+    (key, id)-ascending per-group layout the replan engine publishes."""
+    import jax.numpy as jnp
+
+    from repro.accel.kernels import segmented_order
+    rng = np.random.default_rng(2)
+    for n in (1, 6, 50, 257):
+        seg = np.sort(rng.integers(0, max(1, n // 6) + 1, n)).astype(np.int32)
+        keys = rng.uniform(0, 10, n).astype(np.float32)
+        ties = rng.permutation(n).astype(np.int32)
+        perm = np.asarray(segmented_order(jnp.asarray(seg), jnp.asarray(keys),
+                                          jnp.asarray(ties), interpret=True))
+        assert np.array_equal(perm, np.lexsort((ties, keys, seg))), n
+
+
 # ------------------------------------------------------- state mechanics
 
 def test_state_capacity_depletes_in_priority_order():

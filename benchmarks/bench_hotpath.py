@@ -241,36 +241,70 @@ def _replan_churn_row(seed: int = 1):
         base_rate, num_jobs, days = 100.0, 300, 0.05
     else:
         base_rate, num_jobs, days = 500.0, 2000, 0.25
+    # (label, replan backend, MatchState mirror maintenance) — the third leg
+    # re-runs the array side with REPRO_MATCH_DELTA=0 as the full-rebuild
+    # mirror baseline for the ISSUE 10 acceptance ratio.
+    legs = (("scalar", "scalar", True), ("array", "array", True),
+            ("array_full", "array", False))
+    reps = 1 if FAST else 2   # best-of: single-run wall clock is noisy
     sides, mets = {}, {}
-    for mode in ("scalar", "array"):
-        jobs = generate_jobs(JobTraceConfig(num_jobs=num_jobs, seed=seed,
-                                            mean_interarrival=60.0))
-        for j in jobs:
-            j.requirement = REQ_HIGHPERF
-        sched = SCHEDULERS["venn"](seed=seed, replan=mode)
-        pop = PopulationConfig(seed=1000 + seed, base_rate=base_rate,
-                               cpu_med=1.8, mem_med=1.8)
-        sim = Simulator(jobs, sched, pop,
-                        SimConfig(max_time=days * 24 * 3600.0),
-                        engine="array")
-        with obs.session(tracing=True, metrics=True,
-                         categories={"sched"}) as (tr, reg):
-            t0 = time.time()
-            mets[mode] = sim.run()
-            wall = time.time() - t0
-            stats = span_stats(tr.events)
-        rep = stats.get("venn.replan", {"count": 0, "total_us": 0.0})
-        total_s = rep["total_us"] / 1e6
-        sides[mode] = {
-            "wall_s": wall,
-            "replans": rep["count"],
-            "replan_wall_s": round(total_s, 4),
-            "replans_per_sec": round(rep["count"] / total_s, 1)
-            if total_s else 0.0,
-        }
+    for label, mode, delta in legs:
+        best = None
+        for _ in range(reps):
+            jobs = generate_jobs(JobTraceConfig(num_jobs=num_jobs, seed=seed,
+                                                mean_interarrival=60.0))
+            for j in jobs:
+                j.requirement = REQ_HIGHPERF
+            sched = SCHEDULERS["venn"](seed=seed, replan=mode)
+            pop = PopulationConfig(seed=1000 + seed, base_rate=base_rate,
+                                   cpu_med=1.8, mem_med=1.8)
+            prev_delta = os.environ.get("REPRO_MATCH_DELTA")
+            os.environ["REPRO_MATCH_DELTA"] = "1" if delta else "0"
+            try:
+                sim = Simulator(jobs, sched, pop,
+                                SimConfig(max_time=days * 24 * 3600.0),
+                                engine="array")
+                with obs.session(tracing=True, metrics=True,
+                                 categories={"sched"}) as (tr, reg):
+                    t0 = time.time()
+                    mets[label] = sim.run()
+                    wall = time.time() - t0
+                    stats = span_stats(tr.events)
+            finally:
+                if prev_delta is None:
+                    os.environ.pop("REPRO_MATCH_DELTA", None)
+                else:
+                    os.environ["REPRO_MATCH_DELTA"] = prev_delta
+            rep = stats.get("venn.replan", {"count": 0, "total_us": 0.0})
+            total_s = rep["total_us"] / 1e6
+            eng = sim.engine
+            run = {
+                "wall_s": wall,
+                "replans": rep["count"],
+                "replan_wall_s": round(total_s, 4),
+                "replans_per_sec": round(rep["count"] / total_s, 1)
+                if total_s else 0.0,
+                "state_rebuilds": eng.rebuilds,
+                "state_patches": eng.patches,
+                # combined accel.state_rebuild + accel.state_delta wall
+                "state_mirror_s": round(eng.rebuild_s + eng.patch_s, 4),
+            }
+            if best is None:
+                best = run
+            else:
+                # per-metric best across reps: counts are identical run to
+                # run (deterministic sim), timings keep the least-noisy rep
+                for k in ("wall_s", "replan_wall_s", "state_mirror_s"):
+                    best[k] = min(best[k], run[k])
+                best["replans_per_sec"] = max(best["replans_per_sec"],
+                                              run["replans_per_sec"])
+        sides[label] = best
     assert mets["scalar"].jcts == mets["array"].jcts, \
         "incremental replan must be metric-identical to the scalar path"
     assert mets["scalar"].rounds == mets["array"].rounds
+    assert mets["array"].jcts == mets["array_full"].jcts, \
+        "delta-patched mirror must be metric-identical to full rebuild"
+    assert mets["array"].rounds == mets["array_full"].rounds
     arr = sides["array"]["replan_wall_s"]
     vs_scalar = round(sides["scalar"]["replan_wall_s"] / arr, 2) \
         if arr else float("inf")
@@ -281,18 +315,30 @@ def _replan_churn_row(seed: int = 1):
     # and uses the in-build ratio — a separate series in the regress gate.
     speedup = (round(SEED_REPLAN_WALL_S / arr, 2) if arr else float("inf")) \
         if not FAST else vs_scalar
+    # mirror maintenance: delta-patched vs full-rebuild-every-token (ISSUE 10
+    # acceptance: >= 2x on the combined state_rebuild+state_delta wall)
+    mirror_s = sides["array"]["state_mirror_s"]
+    mirror_full_s = sides["array_full"]["state_mirror_s"]
+    mirror_speedup = round(mirror_full_s / mirror_s, 2) \
+        if mirror_s else float("inf")
     row = {
         **sides["array"],
         "scalar": sides["scalar"],
+        "array_full_rebuild": sides["array_full"],
         "metrics_identical": True,
         "replan_speedup": speedup,
         "speedup_vs_scalar": vs_scalar,
         "meets_1p8x_target": speedup >= 1.8,
+        "mirror_full_s": mirror_full_s,
+        "mirror_speedup": mirror_speedup,
+        "meets_2x_mirror_target": mirror_speedup >= 2.0,
     }
     emit("hotpath_replan_r500_j2000", sides["array"]["replan_wall_s"] * 1e6,
          f"replans={row['replans']} "
          f"replan_wall={row['replan_wall_s']:.2f}s "
-         f"speedup={speedup}x identical=True")
+         f"speedup={speedup}x mirror_speedup={mirror_speedup}x "
+         f"patches={row['state_patches']} rebuilds={row['state_rebuilds']} "
+         f"identical=True")
     return row
 
 
@@ -461,7 +507,9 @@ def append_history(results: dict, out_dir: Path) -> Path:
             "wall_s": churn["wall_s"],
             "replan_wall_s": churn["replan_wall_s"],
             "replans_per_sec": churn["replans_per_sec"],
-            "replan_speedup": churn["replan_speedup"]}))
+            "replan_speedup": churn["replan_speedup"],
+            "state_mirror_s": churn["state_mirror_s"],
+            "mirror_speedup": churn["mirror_speedup"]}))
     audit = results.get("audit_overhead")
     if audit:
         rows.append(("audit_overhead", {

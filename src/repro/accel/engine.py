@@ -33,6 +33,8 @@ through the Pallas kernel (:mod:`repro.accel.kernels.schedule_match`).
 """
 from __future__ import annotations
 
+import os
+import time
 from dataclasses import dataclass
 from typing import Optional, Tuple
 
@@ -268,6 +270,24 @@ class ArrayMatchEngine:
         self.rebuilds = 0
         self.segments = 0
         self.expansions = 0
+        # ---- mirror deltas ----
+        # On a token change the engine asks the scheduler for the dirty-atom
+        # set since the mirror's token (match_delta) and patches only those
+        # rows; a None answer (structural change: atom-universe growth,
+        # partition refinement, fairness drift, restore) falls back to the
+        # full rebuild.  REPRO_MATCH_DELTA=0 pins the full-rebuild path;
+        # REPRO_MATCH_CHECK=1 re-derives the mirror from scheduler truth
+        # after every patch and raises on drift (the paranoid mode,
+        # mirroring REPRO_REPLAN_CHECK).
+        self.delta_enabled = os.environ.get("REPRO_MATCH_DELTA", "1") != "0"
+        self.check_deltas = bool(os.environ.get("REPRO_MATCH_CHECK"))
+        self.patches = 0                # token changes served by st.patch
+        self.rebuild_s = 0.0            # wall time in full mirror rebuilds
+        self.patch_s = 0.0              # wall time in mirror patches
+        # request-table compaction: patched mirrors keep inert entries for
+        # retired requests; once the table outgrows the last rebuild's size
+        # 4x, rebuild (geometric, so the amortized cost stays O(1)/replan)
+        self._rebuilt_requests = 0
         # ---- graceful degradation (opt-in / counters) ----
         # replan_budget_s: minimum simulated seconds between replans; a dirty
         # plan inside the budget is served stale (sanitized for dead
@@ -321,22 +341,53 @@ class ArrayMatchEngine:
         st = self.state
         if st is None or st.token != token:
             tr = _obstrace.TRACER
-            tok = tr.begin("accel.state_rebuild", cat="accel") \
-                if tr.enabled else None
-            st = self.state = MatchState.from_scheduler(
-                sched, token, kcap=self.kcap,
-                # exported prefixes keep the per-replan rebuild
-                # O(atoms x limit); exhaustion re-exports wider
-                export_limit=max(4 * self.kcap, 128))
-            if tok is not None:
-                tr.end(tok, num_atoms=st.num_atoms,
-                       requests=len(st.requests))
+            reg = _obsmetrics.REGISTRY
+            dirty = None
+            if st is not None and self.delta_enabled:
+                delta = getattr(sched, "match_delta", None)
+                if delta is not None:
+                    dirty = delta(st.token)
+                if dirty is not None and len(st.requests) > max(
+                        128, 4 * self._rebuilt_requests):
+                    # patched mirrors accrete inert entries for retired
+                    # requests; compact via a full rebuild once the table
+                    # outgrows the last rebuild 4x (geometric amortization)
+                    dirty = None
+            if dirty is not None:
+                tok = tr.begin("accel.state_delta", cat="accel") \
+                    if tr.enabled else None
+                t0 = time.perf_counter()
+                st.patch(sched, token, dirty)
+                self.patch_s += time.perf_counter() - t0
+                if tok is not None:
+                    tr.end(tok, atoms=len(dirty), requests=len(st.requests))
+                self.patches += 1
+                if reg.enabled:
+                    reg.counter("accel.state_patches").inc()
+                if self.check_deltas:
+                    st.verify_against(sched)
+            else:
+                tok = tr.begin("accel.state_rebuild", cat="accel") \
+                    if tr.enabled else None
+                t0 = time.perf_counter()
+                st = self.state = MatchState.from_scheduler(
+                    sched, token, kcap=self.kcap,
+                    # exported prefixes keep the per-replan rebuild
+                    # O(atoms x limit); exhaustion re-exports wider
+                    export_limit=max(4 * self.kcap, 128))
+                self.rebuild_s += time.perf_counter() - t0
+                if tok is not None:
+                    tr.end(tok, num_atoms=st.num_atoms,
+                           requests=len(st.requests))
+                self.rebuilds += 1
+                self._rebuilt_requests = len(st.requests)
+                if reg.enabled:
+                    reg.counter("accel.state_rebuilds").inc()
             # NOTE: classify() can intern new atom ids without a version
             # bump, so callers must re-check num_atoms per segment —
             # miss_free alone only certifies the id space seen at build
             st.miss_free = st.all_covered \
                 and st.num_atoms == sched.index.num_atoms
-            self.rebuilds += 1
         if was_dirty or self._last_replan_t == -np.inf:
             self._last_replan_t = now
         return st

@@ -79,16 +79,57 @@ def _demand_key(job: Job, req: JobRequest) -> float:
     return float(req.demand - req.granted) / max(job.priority, 1e-9)
 
 
+_I32_MIN = -2 ** 31
+_I32_MAX = 2 ** 31 - 1
+
+
+def _kernel_order(ids: np.ndarray, keys: np.ndarray) -> np.ndarray:
+    """Resort one group through the ``segmented_order`` Pallas kernel
+    (accelerator-resident runs, ``REPRO_REPLAN_ORDER=kernel``), holding the
+    NumPy path's bit-exactness bar.
+
+    The kernel ranks on f32 keys, so its permutation can deviate from the
+    f64 ``np.lexsort`` when keys collide only after f32 rounding.  The guard
+    is a strict-order check on the *f64* keys under the returned
+    permutation: because job ids are unique, ``(key, id)`` ascending is a
+    strict total order, so a permutation passing the check IS the unique
+    sorted order (a non-permutation repeats an element and fails the strict
+    comparison).  Any failure falls back to ``np.lexsort`` — exactness never
+    depends on the kernel."""
+    n = len(ids)
+    if n < 2:
+        return np.arange(n, dtype=np.int64)
+    if ids.min() < _I32_MIN or ids.max() > _I32_MAX:
+        return np.lexsort((ids, keys))
+    import jax.numpy as jnp
+
+    from .kernels.replan_order import segmented_order
+    perm = np.asarray(segmented_order(
+        jnp.asarray(np.zeros(n, dtype=np.int32)),     # one segment
+        jnp.asarray(keys.astype(np.float32)),
+        jnp.asarray(ids.astype(np.int32)))).astype(np.int64)
+    k = keys[perm]
+    i = ids[perm]
+    if bool(np.all((k[:-1] < k[1:]) | ((k[:-1] == k[1:]) & (i[:-1] < i[1:])))):
+        return perm
+    return np.lexsort((ids, keys))
+
+
 class _GroupOrder:
     """Incrementally maintained pending set + demand keys for one group."""
 
     __slots__ = ("name", "jobs", "slot", "ids", "keys", "n",
                  "member_dirty", "key_dirty",
                  "job_order", "job_keys", "order_slots",
-                 "lowered", "lowered_for", "lowered_band")
+                 "lowered", "lowered_for", "lowered_band", "sorter")
 
-    def __init__(self, name: str):
+    def __init__(self, name: str,
+                 sorter: Optional[Callable[[np.ndarray, np.ndarray],
+                                           np.ndarray]] = None):
         self.name = name
+        # resort backend: None = np.lexsort; accelerator-resident runs
+        # route through the segmented_order Pallas kernel (guarded exact)
+        self.sorter = sorter
         self.jobs: List[Job] = []          # slot-indexed pending jobs
         self.slot: Dict[int, int] = {}     # job_id -> slot
         self.ids = np.zeros(8, dtype=np.int64)
@@ -184,7 +225,8 @@ class _GroupOrder:
                 self.job_keys = k.tolist()
                 self.key_dirty = False
                 return self.job_order, self.job_keys, 1
-        order = np.lexsort((ids, keys))    # (key, job_id) ascending
+        order = self.sorter(ids, keys) if self.sorter is not None \
+            else np.lexsort((ids, keys))   # (key, job_id) ascending
         self.order_slots = order
         jobs = self.jobs
         self.job_order = [jobs[s] for s in order.tolist()]
@@ -198,10 +240,19 @@ class ReplanEngine:
     """Drop-in incremental replacement for ``venn_schedule`` +
     ``compile_plan`` inside ``VennScheduler._reschedule``."""
 
-    def __init__(self, check: Optional[bool] = None):
+    def __init__(self, check: Optional[bool] = None,
+                 order_backend: Optional[str] = None):
         if check is None:
             check = bool(os.environ.get("REPRO_REPLAN_CHECK"))
         self.check = check
+        # intra-group resort backend: "numpy" (default, np.lexsort) or
+        # "kernel" (the segmented_order Pallas kernel with the exact-order
+        # guard) — resolved from REPRO_REPLAN_ORDER for CLI runs
+        if order_backend is None:
+            order_backend = os.environ.get("REPRO_REPLAN_ORDER", "numpy")
+        if order_backend not in ("numpy", "kernel"):
+            raise ValueError(f"unknown replan order backend {order_backend!r}")
+        self._sorter = _kernel_order if order_backend == "kernel" else None
         self._states: Dict[str, _GroupOrder] = {}
         self._synced = False
         # atom key -> (constituent lowered lists, merged list): cross-replan
@@ -234,7 +285,7 @@ class ReplanEngine:
     def _state(self, name: str) -> _GroupOrder:
         st = self._states.get(name)
         if st is None:
-            st = self._states[name] = _GroupOrder(name)
+            st = self._states[name] = _GroupOrder(name, self._sorter)
         return st
 
     # --------------------------------------------------------- event hooks

@@ -63,7 +63,7 @@ class MatchState:
     __slots__ = ("requests", "remaining", "cand_req", "cand_lo", "cand_hi",
                  "covered", "has_cand", "has_cand_list",
                  "all_covered", "miss_free", "truncated", "token", "kcap",
-                 "export_limit", "_rows", "_req_ix")
+                 "export_limit", "_rows", "_req_ix", "_rem_buf")
 
     def __init__(self, requests: List[JobRequest],
                  rows: List[Optional[List[Tuple[int, float, float]]]],
@@ -85,8 +85,12 @@ class MatchState:
         # complement and dead traffic rides through at gather speed
         self.has_cand = np.array([bool(r) for r in rows], dtype=bool)
         self.has_cand_list = self.has_cand.tolist()
-        self.remaining = np.array(
+        # ``remaining`` stays a prefix view of ``_rem_buf`` so patch-time
+        # appends are amortized O(1) (capacity-doubling) instead of a full
+        # O(R) concatenate per new request
+        self._rem_buf = np.array(
             [max(0, r.demand - r.granted) for r in requests], dtype=np.int64)
+        self.remaining = self._rem_buf[:len(requests)]
         self._lower(kcap)
 
     # ------------------------------------------------------------------ build
@@ -144,6 +148,151 @@ class MatchState:
         self.cand_lo = cand_lo
         self.cand_hi = cand_hi
         self.truncated = truncated
+
+    # ------------------------------------------------------------------ patch
+
+    def patch(self, sched, token: tuple, dirty) -> None:
+        """Delta-maintain the mirror: re-derive only the ``dirty`` atom ids
+        from scheduler truth (``export_match_rows``) and stamp ``token``.
+
+        Soundness contract (the caller's ``match_delta`` guarantees it):
+        every atom whose row content changed since this state's token is in
+        ``dirty``, and the atom universe / export cap are unchanged.  New
+        requests surfacing in patched rows are appended to ``requests`` /
+        ``remaining``; requests no longer reachable from any row keep their
+        (now inert) entries — the matcher never sees them, and the engine
+        forces a full rebuild when the dead fraction grows too large.
+        ``_rows`` is kept authoritative so a later :meth:`expand` re-lowers
+        patched atoms from truth, and a row longer than the current ``K``
+        just marks its atom truncated (the normal widen machinery)."""
+        self.token = token
+        if not dirty:
+            return
+        aids = sorted(dirty)
+        # copy=False: the live slot lists are consumed in this loop and never
+        # retained — the (j, lo, hi) rows built below are fresh tuples
+        new_rows = sched.export_match_rows(aids, self.export_limit,
+                                           copy=False)
+        rows = self._rows
+        req_ix = self._req_ix
+        requests = self.requests
+        covered = self.covered
+        has_cand = self.has_cand
+        has_cand_list = self.has_cand_list
+        cand_req, cand_lo, cand_hi = self.cand_req, self.cand_lo, self.cand_hi
+        truncated = self.truncated
+        K = cand_req.shape[1]
+        new_rem: List[int] = []
+        cov_flipped = False
+        for aid, sl in zip(aids, new_rows):
+            if sl is None:
+                rows[aid] = None
+                if covered[aid]:
+                    covered[aid] = False
+                    cov_flipped = True
+                has_cand[aid] = False
+                has_cand_list[aid] = False
+                cand_req[aid, :] = -1
+                cand_lo[aid, :] = 0.0
+                cand_hi[aid, :] = 0.0
+                truncated[aid] = False
+                continue
+            try:
+                # fast path: every slot request already interned (churny
+                # replans dirty the same rows over and over; an unseen
+                # request appears at most once, on its arrival replan)
+                row = [(req_ix[id(req)], lo, hi) for req, lo, hi in sl]
+            except KeyError:
+                row = []
+                for req, lo, hi in sl:
+                    j = req_ix.get(id(req))
+                    if j is None:
+                        j = req_ix[id(req)] = len(requests)
+                        requests.append(req)
+                        new_rem.append(max(0, req.demand - req.granted))
+                    row.append((j, lo, hi))
+            rows[aid] = row
+            if not covered[aid]:
+                covered[aid] = True
+                cov_flipped = True
+            alive = bool(row)
+            has_cand[aid] = alive
+            has_cand_list[aid] = alive
+            cut = row[:K]
+            m = len(cut)
+            if m:
+                js, los, his = zip(*cut)
+                cand_req[aid, :m] = js
+                cand_lo[aid, :m] = los
+                cand_hi[aid, :m] = his
+            if m < K:
+                cand_req[aid, m:] = -1
+                cand_lo[aid, m:] = 0.0
+                cand_hi[aid, m:] = 0.0
+            truncated[aid] = len(row) > K or (
+                self.export_limit is not None
+                and len(row) >= self.export_limit)
+        if new_rem:
+            buf = self._rem_buf
+            n = self.remaining.shape[0]
+            need = n + len(new_rem)
+            if need > buf.shape[0]:
+                grown = np.empty(max(need, 2 * buf.shape[0], 64),
+                                 dtype=np.int64)
+                grown[:n] = self.remaining
+                buf = self._rem_buf = grown
+            buf[n:need] = new_rem
+            self.remaining = buf[:need]
+        if cov_flipped:
+            self.all_covered = bool(covered.all()) if len(covered) else False
+
+    def verify_against(self, sched) -> None:
+        """Paranoid self-check (``REPRO_MATCH_CHECK=1``): re-derive the
+        mirror from scheduler truth and raise on any semantic drift.
+
+        Rows are compared as ``(request-object, lo, hi)`` sequences (dense
+        indices differ between a patched and a fresh state — patched states
+        keep inert entries for retired requests); ``remaining`` is compared
+        for every truth-reachable request."""
+        truth = MatchState.from_scheduler(sched, self.token,
+                                          kcap=self.cand_req.shape[1],
+                                          export_limit=self.export_limit)
+        if truth.num_atoms != self.num_atoms:
+            raise RuntimeError(
+                f"match mirror drift: atom universe {self.num_atoms} != "
+                f"truth {truth.num_atoms}")
+        for aid in range(truth.num_atoms):
+            mine, real = self._rows[aid], truth._rows[aid]
+            if (mine is None) != (real is None):
+                raise RuntimeError(
+                    f"match mirror drift: atom {aid} covered="
+                    f"{mine is not None}, truth {real is not None}")
+            if mine is None:
+                continue
+            sem = [(id(self.requests[j]), lo, hi) for j, lo, hi in mine]
+            want = [(id(truth.requests[j]), lo, hi) for j, lo, hi in real]
+            if sem != want:
+                raise RuntimeError(
+                    f"match mirror drift: atom {aid} row differs "
+                    f"({len(mine)} vs {len(real)} slots)")
+        for j, req in enumerate(truth.requests):
+            mj = self._req_ix.get(id(req))
+            if mj is None:
+                raise RuntimeError(
+                    f"match mirror drift: request {req!r} unknown to mirror")
+            if int(self.remaining[mj]) != int(truth.remaining[j]):
+                raise RuntimeError(
+                    f"match mirror drift: remaining[{req!r}] = "
+                    f"{int(self.remaining[mj])}, truth {int(truth.remaining[j])}")
+        # dense-array consistency: the (A, K) prefixes must reflect _rows
+        K = self.cand_req.shape[1]
+        for aid, row in enumerate(self._rows):
+            cut = row[:K] if row else []
+            m = len(cut)
+            if (self.cand_req[aid, :m].tolist() != [r[0] for r in cut]
+                    or (m < K and self.cand_req[aid, m] != -1)):
+                raise RuntimeError(
+                    f"match mirror drift: dense row {aid} out of sync")
 
     def expand(self) -> bool:
         """Double the candidate cap (after a truncated row exhausted its

@@ -134,6 +134,25 @@ class BaseScheduler:
         only when the atom partition refines or the pending order changes)."""
         return (self.index.version, self.order_version)
 
+    def match_delta(self, base_token: tuple):
+        """Dirty atom ids whose candidate rows may differ between
+        ``base_token`` and the current :meth:`match_token`, or ``None`` when
+        only a full rebuild is sound.  Baselines rebuild their per-atom
+        candidate lists wholesale on every resort, so they report no deltas;
+        the array engine then falls back to its full mirror rebuild (the
+        pre-delta behavior, unchanged)."""
+        return None
+
+    def export_match_rows(self, atom_ids, limit: Optional[int] = None,
+                          copy: bool = True):
+        """Per-atom candidate rows for the selected ``atom_ids`` only (the
+        mirror-patch export).  The base implementation re-slices
+        :meth:`export_match_slots` (``copy`` is then moot — the slots are
+        already fresh); schedulers with a compiled dispatch table override
+        with a direct row snapshot."""
+        slots = self.export_match_slots(limit)
+        return [slots[aid] if aid < len(slots) else None for aid in atom_ids]
+
     def export_match_slots(self, limit: Optional[int] = None):
         """Per-atom candidate slots for the array engine, mirroring
         ``checkin``: every pending request eligible for the atom, in service

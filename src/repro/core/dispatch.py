@@ -88,6 +88,31 @@ class DispatchTable:
                 [(slot[0], slot[1], slot[2]) for slot in s]
                 for s in self._slots]
 
+    def snapshot_rows(self, atom_ids, limit: Optional[int] = None,
+                      copy: bool = True) -> List[Optional[List]]:
+        """:meth:`snapshot` restricted to ``atom_ids`` (same pristine
+        ``(req, lo, hi)`` tuples, same ``limit`` prefix-capping as
+        ``export_match_slots``).  This is the delta-export surface: the array
+        engine's mirror patch re-derives only its dirty atoms instead of
+        re-scanning the whole table.
+
+        ``copy=False`` skips the pristine-tuple copies and returns the live
+        ``[req, lo, hi]`` slot lists themselves — only for callers that
+        consume the rows synchronously (the mirror patch) and never retain
+        them across the table's in-place slot invalidation."""
+        slots = self._slots
+        out: List[Optional[List]] = []
+        for aid in atom_ids:
+            s = slots[aid] if aid < len(slots) else None
+            if s is None:
+                out.append(None)
+            elif not copy:
+                out.append(s if limit is None else s[:limit])
+            else:
+                out.append([(slot[0], slot[1], slot[2])
+                            for slot in (s if limit is None else s[:limit])])
+        return out
+
 
 def compile_plan(plan: SchedulePlan, intern, num_atoms: int,
                  tier_decisions: Dict[int, object]) -> DispatchTable:

@@ -52,6 +52,15 @@ class EligibilityIndex:
         # ---- vectorized threshold matrix (R requirements x C capability dims)
         self._cap_names: List[str] = []
         self._mins: np.ndarray = np.zeros((0, 0))
+        # ---- classification cache: satisfaction-code -> interned atom id,
+        # valid for one ``version`` (the atom partition).  Replans re-classify
+        # chunk tails repeatedly between version bumps; with the cache those
+        # calls skip the per-code frozenset construction + intern entirely.
+        # -1 marks a code not yet realized; new codes are interned in
+        # ascending-code order, exactly matching the uncached visit order,
+        # so atom-id assignment is bit-identical with or without the cache.
+        self._clf_version = -1
+        self._clf_lut: Optional[np.ndarray] = None
         self._rebuild_arrays()
 
     # ------------------------------------------------------------- interning
@@ -102,13 +111,21 @@ class EligibilityIndex:
         names = [r.name for r in self.requirements]
         if R <= 16:
             # encode each satisfaction row as one small int and intern via a
-            # dense 2^R LUT filled from a bincount: O(n), no sort at all
-            # (realized codes are visited ascending, matching the sorted
-            # order of the unique path bit for bit)
+            # dense 2^R LUT filled lazily and kept across calls while the
+            # partition version holds: O(n) per call, no sort, and repeat
+            # classifications (replan-boundary chunk-tail reclassifies) skip
+            # the frozenset construction + intern entirely.  New codes are
+            # interned ascending, matching the uncached visit order bit for
+            # bit, so atom-id assignment is unchanged.
             codes = sat @ (np.int64(1) << np.arange(R, dtype=np.int64))
-            counts = np.bincount(codes, minlength=1 << R)
-            lut = np.empty(1 << R, dtype=np.int64)
-            for code in np.flatnonzero(counts).tolist():
+            lut = self._clf_lut
+            if lut is None or self._clf_version != self.version:
+                lut = self._clf_lut = np.full(1 << R, -1, dtype=np.int64)
+                self._clf_version = self.version
+            out = lut[codes]
+            if (out >= 0).all():
+                return out
+            for code in np.unique(codes[out < 0]).tolist():
                 key = frozenset(nm for b, nm in enumerate(names) if code >> b & 1)
                 lut[code] = self.intern(key)
             return lut[codes]

@@ -87,6 +87,25 @@ class VennScheduler(BaseScheduler):
         self._feed_ids: Optional[np.ndarray] = None
         self._feed_babs: Optional[np.ndarray] = None
         self._feed_pos = 0
+        # ---- match-delta bookkeeping (the array engine's mirror patches) --
+        # Per replan we record which atom ids' dispatch rows may have changed
+        # since the previous replan; the engine unions the entries between
+        # its mirror's token and the current one (match_delta) and patches
+        # only those rows.  Two detection modes, picked per replan:
+        #   * array replan engine active: per-atom row-object identity —
+        #     ReplanEngine.compile reuses lowered/merged lists only when
+        #     their content is untouched, so `row is prev_row` is sound;
+        #   * scalar replan: per-atom priority-name tuples plus the set of
+        #     group names that saw an on_request/on_complete/on_grant since
+        #     the last replan (fairness drift has no event, so ε > 0 reports
+        #     no delta and the engine falls back to a full rebuild).
+        self._prev_rows: Optional[list] = None     # row objects (array mode)
+        self._prev_names: Optional[list] = None    # name tuples (scalar mode)
+        self._prev_version = -1
+        self._dirty_names: set = set()
+        # (sched_invocations, dirty-atom-id set or None) per replan, newest
+        # last; bounded so a long-idle mirror just falls back to a rebuild
+        self._delta_log: List[tuple] = []
 
     # ------------------------------------------------------- crash snapshots
 
@@ -103,6 +122,13 @@ class VennScheduler(BaseScheduler):
         # identity; drop it and let the first post-restore replan rebuild
         # from the authoritative group state (incremental ≡ full recompute)
         d["_replan"] = None
+        # match-delta bookkeeping is identity-keyed too: reset it so the
+        # first post-restore replan reports no delta and the array engine's
+        # mirror resyncs via a full rebuild
+        d["_prev_rows"] = None
+        d["_prev_names"] = None
+        d["_dirty_names"] = set()
+        d["_delta_log"] = []
         return d
 
     def __setstate__(self, d):
@@ -122,6 +148,7 @@ class VennScheduler(BaseScheduler):
             g.jobs.append(request.job)
         self.pending.append(request)
         self._plan_dirty = True
+        self._dirty_names.add(req.name)
         if self._replan is not None:
             self._replan.on_request(request)
 
@@ -133,6 +160,7 @@ class VennScheduler(BaseScheduler):
         if g and request.job.remaining_rounds == 0 and request.job in g.jobs:
             g.jobs.remove(request.job)
         self._plan_dirty = True
+        self._dirty_names.add(request.requirement.name)
         if self._replan is not None:
             self._replan.on_complete(request)
 
@@ -140,6 +168,7 @@ class VennScheduler(BaseScheduler):
         """Keep the incremental replan engine's demand-key mirror current
         (grants change ``remaining_demand`` — and a fill removes the job
         from the pending set — without any other scheduler hook firing)."""
+        self._dirty_names.add(request.requirement.name)
         if self._replan is not None:
             self._replan.on_grant(request)
 
@@ -251,6 +280,81 @@ class VennScheduler(BaseScheduler):
         return [s if s is None else
                 [(slot[0], slot[1], slot[2]) for slot in s[:limit]]
                 for s in self.dispatch._slots]
+
+    def export_match_rows(self, atom_ids, limit: Optional[int] = None,
+                          copy: bool = True):
+        """Candidate rows for ``atom_ids`` only — the mirror-patch export.
+        ``copy=False`` hands out the live slot lists (synchronous consumers
+        only; see :meth:`DispatchTable.snapshot_rows`)."""
+        return self.dispatch.snapshot_rows(atom_ids, limit, copy=copy)
+
+    def match_delta(self, base_token: tuple):
+        """Atom ids whose dispatch rows may differ between ``base_token``
+        and the current :meth:`match_token`, or ``None`` when only a full
+        mirror rebuild is sound (atom-partition refinement, atom-universe
+        growth, fairness drift, restore, or a delta log too old to cover
+        the gap).  The returned set is a *superset* of the changed atoms —
+        patching it from :meth:`export_match_rows` truth is always exact."""
+        if base_token[0] != self.index.version:
+            return None                     # partition refined: structural
+        base_inv = base_token[1]
+        log = self._delta_log
+        if not log or log[0][0] > base_inv + 1:
+            return None                     # gap not covered by the log
+        dirty: set = set()
+        for inv, entry in log:
+            if inv <= base_inv:
+                continue
+            if entry is None:
+                return None                 # a structural replan in the gap
+            dirty |= entry
+        return dirty
+
+    def _note_match_delta(self, eng) -> None:
+        """Record this replan's dirty-atom set (called at the end of every
+        ``_reschedule``, after the new dispatch table is published)."""
+        slots = self.dispatch._slots
+        entry: Optional[set] = None
+        if eng is not None:
+            # array replan mode: ReplanEngine.compile reuses a lowered /
+            # merged row object only while its content is untouched (fills
+            # and completions force fresh order objects), so row identity
+            # across replans is a sound clean test
+            prev = self._prev_rows
+            if (prev is not None and len(prev) == len(slots)
+                    and self._prev_version == self.index.version):
+                entry = {aid for aid, row in enumerate(slots)
+                         if row is not prev[aid]}
+            self._prev_rows = list(slots)
+            self._prev_names = None
+        else:
+            # scalar replan mode: compile_plan builds fresh lists every time,
+            # so identity never matches — compare per-atom priority-name
+            # tuples, and dirty every atom whose constituent groups saw an
+            # event since the last replan.  Fairness keys drift without
+            # events (they move with supply), so ε > 0 reports no delta.
+            names: List[Optional[tuple]] = [None] * len(slots)
+            id_of = self.index.id_of
+            for key, groups in self.plan.atom_priority.items():
+                aid = id_of(key)
+                if aid is not None and aid < len(names):
+                    names[aid] = tuple(g.requirement.name for g in groups)
+            prev_n = self._prev_names
+            if (prev_n is not None and len(prev_n) == len(names)
+                    and self._prev_version == self.index.version
+                    and not self.fairness.enabled()):
+                dn = self._dirty_names
+                entry = {aid for aid, nm in enumerate(names)
+                         if nm != prev_n[aid]
+                         or (nm and any(n in dn for n in nm))}
+            self._prev_names = names
+            self._prev_rows = None
+        self._dirty_names.clear()
+        self._prev_version = self.index.version
+        log = self._delta_log
+        log.append((self.sched_invocations, entry))
+        if len(log) > 64:
+            del log[0]
 
     def _absorb_feed(self, now: float) -> None:
         """Batch-record fed check-ins with time <= now into the estimator."""
@@ -382,6 +486,7 @@ class VennScheduler(BaseScheduler):
                                          self.index.num_atoms,
                                          self.tier_decisions)
         self._live[:] = self.dispatch.live_list()
+        self._note_match_delta(eng)
         if sub is not None:
             tr.end(sub, num_atoms=self.index.num_atoms,
                    **({k: eng.last_stats[k] for k in

@@ -381,3 +381,248 @@ def test_unknown_engine_rejected():
     with pytest.raises(ValueError, match="unknown engine"):
         Simulator(generate_jobs(JobTraceConfig(num_jobs=1)),
                   VennScheduler(), engine="warp")
+
+
+# ------------------------------------------------------- mirror deltas
+
+class DeltaFakeSched(FakeSched):
+    """FakeSched speaking the mirror-delta protocol: mutate rows through
+    :meth:`set_row` and the engine's next ``prepare`` patches exactly those
+    atoms instead of rebuilding (``FakeSched`` has no ``match_delta``, so
+    the plain fakes above always take the full-rebuild path)."""
+
+    def __init__(self, slots):
+        super().__init__(slots)
+        self._inv = 0
+        self._log = []          # (invocation, {dirty atom ids}) — unbounded
+        self.index = type("I", (), {"num_atoms": len(slots)})()
+
+    def prepare_match(self, now):
+        pass
+
+    def match_token(self):
+        return (0, self._inv)
+
+    def set_row(self, aid, row):
+        self._slots[aid] = row
+        self._inv += 1
+        self._log.append((self._inv, {aid}))
+
+    def match_delta(self, base_token):
+        if base_token[0] != 0:
+            return None
+        dirty = set()
+        for inv, entry in self._log:
+            if inv > base_token[1]:
+                dirty |= entry
+        return dirty
+
+    def export_match_rows(self, atom_ids, limit=None, copy=True):
+        out = []
+        for aid in atom_ids:
+            s = self._slots[aid] if aid < len(self._slots) else None
+            out.append(s if s is None or limit is None else s[:limit])
+        return out
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_kcap_exhaustion_expands_on_patched_mirror(seed, monkeypatch):
+    """A *patched* row longer than the candidate cap (but within the export
+    limit) must widen-and-rematch in place: expansion fires, no rebuild."""
+    monkeypatch.setenv("REPRO_MATCH_CHECK", "1")
+    rng = np.random.default_rng(seed)
+    A = int(rng.integers(2, 5))
+    hot = int(rng.integers(0, A))
+    slots = [[(FakeReq(int(rng.integers(1, 4))), -math.inf, math.inf)
+              for _ in range(int(rng.integers(1, 4)))] for _ in range(A)]
+    sched = DeltaFakeSched(slots)
+    engine = ArrayMatchEngine()
+    engine.prepare(sched, 0.0)
+    assert engine.rebuilds == 1
+    # dead prefix deeper than kcap but inside the export limit: the patched
+    # mirror marks the row truncated and expand() finds the live tail
+    n_dead = int(rng.integers(40, 100))
+    tail = FakeReq(int(rng.integers(1, 3)))
+    sched.set_row(hot, [(FakeReq(1, granted=1), -math.inf, math.inf)
+                        for _ in range(n_dead)]
+                  + [(tail, -math.inf, math.inf)])
+    engine.prepare(sched, 0.0)
+    assert engine.patches == 1 and engine.rebuilds == 1
+    nseg = int(rng.integers(2, 6))
+    res = engine.match(np.full(nseg, hot, dtype=np.int64), np.ones(nseg))
+    assert engine.expansions >= 1 and engine.rebuilds == 1
+    want = min(tail.demand, nseg)
+    assert int(res.granted.sum()) == want
+    assert all(engine.state.requests[res.choice[i]] is tail
+               for i in range(want))
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_export_exhaustion_rewidens_from_patched_mirror(seed, monkeypatch):
+    """A patched row whose *exported prefix* is entirely dead must raise
+    NeedWiderExport and find the live slot after the wider re-export — the
+    widen-and-rematch audit under the delta path."""
+    from repro.accel.engine import NeedWiderExport
+    monkeypatch.setenv("REPRO_MATCH_CHECK", "1")
+    rng = np.random.default_rng(100 + seed)
+    A = int(rng.integers(2, 5))
+    hot = int(rng.integers(0, A))
+    slots = [[(FakeReq(int(rng.integers(1, 4))), -math.inf, math.inf)
+              for _ in range(int(rng.integers(1, 4)))] for _ in range(A)]
+    sched = DeltaFakeSched(slots)
+    engine = ArrayMatchEngine()
+    engine.prepare(sched, 0.0)
+    # beyond the default export limit (max(4*kcap, 128)): the patch keeps an
+    # export-capped prefix, exhaustion must re-export wider via rebuild
+    n_dead = int(rng.integers(130, 180))
+    tail = FakeReq(int(rng.integers(1, 3)))
+    sched.set_row(hot, [(FakeReq(1, granted=1), -math.inf, math.inf)
+                        for _ in range(n_dead)]
+                  + [(tail, -math.inf, math.inf)])
+    nseg = int(rng.integers(2, 6))
+    aids = np.full(nseg, hot, dtype=np.int64)
+    res = None
+    for _ in range(12):
+        engine.prepare(sched, 0.0)
+        try:
+            res = engine.match(aids, np.ones(nseg))
+            break
+        except NeedWiderExport:
+            continue
+    assert res is not None, "match never terminated after widening"
+    assert engine.patches >= 1, "exhaustion did not start from a patch"
+    assert engine.rebuilds >= 2          # the wider re-export rebuilt
+    want = min(tail.demand, nseg)
+    assert int(res.granted.sum()) == want
+    assert all(engine.state.requests[res.choice[i]] is tail
+               for i in range(want))
+
+
+def _drive_mirror_vs_truth(mode: str, seed: int, steps: int = 30) -> None:
+    """Step-level dual-universe check: after every arrival / completion /
+    grant / replan the delta-patched mirror must equal ``from_scheduler``
+    truth (``verify_against`` compares rows, coverage, remaining)."""
+    from repro.core.types import Job, JobRequest
+    from repro.sim.devices import REQUIREMENT_CLASSES
+
+    rng = np.random.default_rng(seed)
+    sched = VennScheduler(seed=0, replan=mode)
+    engine = ArrayMatchEngine()
+    jobs = {}
+    caps = {"cpu": 4.0 * np.exp(0.6 * rng.standard_normal(60)),
+            "mem": 4.0 * np.exp(0.6 * rng.standard_normal(60))}
+    t, next_id = 0.0, 0
+
+    def verify(now):
+        engine.prepare(sched, now)
+        engine.state.verify_against(sched)
+
+    for _ in range(steps):
+        t += float(rng.uniform(1.0, 50.0))
+        open_ids = [jid for jid, j in jobs.items()
+                    if j.current is not None
+                    and j.current.demand > j.current.granted]
+        op = rng.uniform()
+        if op < 0.35 or not open_ids:
+            cls = REQUIREMENT_CLASSES[int(rng.integers(
+                0, len(REQUIREMENT_CLASSES)))]
+            j = Job(job_id=next_id, requirement=cls,
+                    demand_per_round=int(rng.integers(1, 8)),
+                    total_rounds=int(rng.integers(1, 4)), arrival_time=t,
+                    priority=float(rng.choice([0.5, 1.0, 2.0])))
+            r = JobRequest(job=j, round_index=0, demand=j.demand_per_round,
+                           submit_time=t)
+            j.current = r
+            jobs[next_id] = j
+            next_id += 1
+            sched.on_request(r, t)
+        elif op < 0.70:
+            r = jobs[int(rng.choice(open_ids))].current
+            # apply the grant exactly as the simulator does: scheduler event
+            # plus the mirrored remaining decrement
+            r.granted += 1
+            sched.on_grant(r)
+            ix = engine.state.request_index(r)
+            if ix is not None:
+                engine.state.consume(ix)
+            else:
+                engine.invalidate()
+        else:
+            j = jobs[int(rng.choice(open_ids))]
+            r = j.current
+            sched.on_complete(r, t)
+            j.rounds_done += 1
+            if rng.uniform() < 0.7 and j.rounds_done < j.total_rounds:
+                nxt = JobRequest(job=j, round_index=r.round_index + 1,
+                                 demand=j.demand_per_round, submit_time=t)
+                j.current = nxt
+                sched.on_request(nxt, t)
+            else:
+                j.current = None
+        times = np.sort(rng.uniform(t - 40.0, t, size=10))
+        sel = rng.integers(0, 60, size=10)
+        sched.supply.record_batch(
+            sched.classify_caps(caps)[sel].astype(np.int64), times)
+        verify(t)
+    assert engine.patches > 0, "the delta path never engaged"
+
+
+@pytest.mark.parametrize("mode", ["scalar", "array"])
+@pytest.mark.parametrize("seed", [0, 3])
+def test_patched_mirror_equals_truth_stepwise(mode, seed):
+    _drive_mirror_vs_truth(mode, seed)
+
+
+def test_restore_drops_mirror_and_resyncs():
+    """Pickle/restore drops the mirror (engine state) and the scheduler's
+    delta log; the next prepare full-rebuilds and deltas resume after."""
+    import pickle
+
+    from repro.core.types import Job, JobRequest
+    from repro.sim.devices import REQUIREMENT_CLASSES
+
+    sched = VennScheduler(seed=0, replan="array")
+    engine = ArrayMatchEngine()
+    jobs = {}
+    rng = np.random.default_rng(7)
+    caps = {"cpu": 4.0 * np.exp(0.6 * rng.standard_normal(40)),
+            "mem": 4.0 * np.exp(0.6 * rng.standard_normal(40))}
+    t = 0.0
+    for jid in range(6):
+        t += 10.0
+        cls = REQUIREMENT_CLASSES[jid % len(REQUIREMENT_CLASSES)]
+        j = Job(job_id=jid, requirement=cls, demand_per_round=5,
+                total_rounds=2, arrival_time=t, priority=1.0)
+        r = JobRequest(job=j, round_index=0, demand=5, submit_time=t)
+        j.current = r
+        jobs[jid] = j
+        sched.on_request(r, t)
+        sched.supply.record_batch(
+            sched.classify_caps(caps)[:8].astype(np.int64),
+            np.sort(rng.uniform(t - 9.0, t, size=8)))
+        engine.prepare(sched, t)
+        engine.state.verify_against(sched)
+    assert engine.patches > 0
+    before = engine.patches
+    # ---- snapshot / restore mid-flight
+    sched, engine = pickle.loads(pickle.dumps((sched, engine)))
+    assert engine.state is None              # the mirror did not survive
+    jobs = {r.job.job_id: r.job for r in sched.pending}
+    t += 10.0
+    engine.prepare(sched, t)                 # resync: full rebuild
+    engine.state.verify_against(sched)
+    assert engine.patches == before          # no patch against a dropped log
+    # deltas resume after the post-restore replan re-seeds the row mirror:
+    # the first replanning event's log entry is None (nothing to diff
+    # against the dropped log), the second patches again
+    for k in (1, 2):
+        t += 10.0
+        cls = REQUIREMENT_CLASSES[k % len(REQUIREMENT_CLASSES)]
+        j = Job(job_id=100 + k, requirement=cls, demand_per_round=3,
+                total_rounds=1, arrival_time=t, priority=1.0)
+        r = JobRequest(job=j, round_index=0, demand=3, submit_time=t)
+        j.current = r
+        sched.on_request(r, t)
+        engine.prepare(sched, t)
+        engine.state.verify_against(sched)
+    assert engine.patches == before + 1

@@ -1,0 +1,94 @@
+"""First-run semantics of the ``benchmarks.regress`` perf gate (ISSUE 10).
+
+The gate must treat *absence of history* as "baseline established", never as
+a crash or a false regression:
+
+* missing history file — programmatic ``check()``/``load_history()``, not
+  just the CLI guard in ``main()``;
+* a brand-new metric key appearing in the latest row while every prior row
+  predates it (exactly what adding ``state_mirror_s``/``mirror_speedup``
+  does to an existing series);
+* a single-row series (first ever bench run).
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import regress
+
+
+def _row(workload, metrics, ts, host="testhost", fast=True):
+    return {"commit": "abc1234", "ts": ts, "host": host, "fast": fast,
+            "workload": workload, "metrics": metrics}
+
+
+def _write(tmp_path, rows):
+    p = tmp_path / "hist.jsonl"
+    p.write_text("".join(json.dumps(r) + "\n" for r in rows))
+    return p
+
+
+def test_check_on_missing_file_passes_programmatically(tmp_path, capsys):
+    # not via main(): callers (CI steps, other tests) invoke check() directly
+    missing = tmp_path / "nope.jsonl"
+    assert regress.check(missing) == 0
+    assert "nothing to check" in capsys.readouterr().out
+
+
+def test_load_history_on_missing_file_returns_empty(tmp_path):
+    assert regress.load_history(tmp_path / "nope.jsonl") == []
+
+
+def test_first_ever_run_establishes_baseline(tmp_path, capsys):
+    p = _write(tmp_path, [_row("w", {"wall_s": 2.0}, ts=1.0)])
+    assert regress.check(p) == 0
+    assert "no comparable history" in capsys.readouterr().out
+
+
+def test_new_metric_key_with_stale_priors_is_baseline(tmp_path, capsys):
+    # prior rows predate the metric entirely — the latest run must pass with
+    # a "baseline" note, not crash or compare against nothing
+    p = _write(tmp_path, [
+        _row("w", {"wall_s": 2.0}, ts=1.0),
+        _row("w", {"wall_s": 2.1, "mirror_speedup": 3.5,
+                   "state_mirror_s": 0.4}, ts=2.0),
+    ])
+    assert regress.check(p) == 0
+    out = capsys.readouterr().out
+    assert out.count("no comparable history") == 2  # both new keys noted
+
+
+def test_new_metric_key_then_regression_is_caught(tmp_path, capsys):
+    # once the key has a prior row, the band applies as usual
+    p = _write(tmp_path, [
+        _row("w", {"mirror_speedup": 4.0}, ts=1.0),
+        _row("w", {"mirror_speedup": 1.0}, ts=2.0),  # 4x drop > 50% band
+    ])
+    assert regress.check(p) == 1
+    assert "regressed beyond" in capsys.readouterr().out
+
+
+def test_mirror_metrics_are_tracked_with_correct_directions():
+    assert regress.TRACKED["state_mirror_s"] == ("lower", "host")
+    assert regress.TRACKED["mirror_speedup"] == ("higher", "any")
+
+def test_cap_only_metric_ignores_relative_band(tmp_path, capsys):
+    # a lucky near-zero overhead run must not turn every later honest run
+    # inside the real budget into a band failure
+    p = _write(tmp_path, [
+        _row("w", {"audit_overhead_frac": 0.0016}, ts=1.0),
+        _row("w", {"audit_overhead_frac": 0.032}, ts=2.0),  # 20x, cap ok
+    ])
+    assert regress.check(p) == 0
+    assert "cap-only" in capsys.readouterr().out
+
+
+def test_cap_only_metric_still_enforces_cap(tmp_path, capsys):
+    p = _write(tmp_path, [
+        _row("w", {"audit_overhead_frac": 0.0016}, ts=1.0),
+        _row("w", {"audit_overhead_frac": 0.30}, ts=2.0),
+    ])
+    assert regress.check(p) == 1
+    assert "breaches absolute cap" in capsys.readouterr().out

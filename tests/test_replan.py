@@ -271,3 +271,37 @@ def test_replan_engine_survives_pickle_restore(tmp_path):
         u.replan(t)
     assert _plan_sig(unis[0].sched) == _plan_sig(unis[1].sched)
     assert _table_sig(unis[0].sched) == _table_sig(unis[1].sched)
+
+
+# ---------------------------------------------------- kernel order backend
+
+def test_kernel_order_matches_lexsort():
+    """REPRO_REPLAN_ORDER=kernel resolves ties and magnitudes exactly like
+    the NumPy lexsort path (the f64 strict-order guard falls back on any
+    f32-rank ambiguity, so the permutation is always the unique one)."""
+    pytest.importorskip("jax")
+    from repro.accel.replan import _kernel_order
+
+    rng = np.random.default_rng(0)
+    for n in (0, 1, 2, 7, 64, 257):
+        # heavy duplication forces the id tie-break; near-equal f64 keys
+        # force the f32-ambiguity fallback
+        keys = rng.choice([0.5, 1.25, 1.25 + 1e-12, 2.0], size=n)
+        ids = rng.permutation(n).astype(np.int64)
+        got = _kernel_order(ids, keys)
+        want = np.lexsort((ids, keys))
+        assert np.array_equal(got, want), f"n={n}"
+
+
+def test_kernel_order_backend_plan_equivalent(monkeypatch):
+    """Full step-level equivalence with the Pallas segmented_order resort
+    path enabled (paranoid self-check active via the autouse fixture)."""
+    pytest.importorskip("jax")
+    monkeypatch.setenv("REPRO_REPLAN_ORDER", "kernel")
+    _drive_script(2, steps=25)
+
+
+def test_unknown_order_backend_rejected(monkeypatch):
+    from repro.accel.replan import ReplanEngine
+    with pytest.raises(ValueError, match="order backend"):
+        ReplanEngine(order_backend="warp")
